@@ -1,0 +1,309 @@
+"""Benchmark harness: one section per paper claim (DESIGN.md sec. 6).
+
+  E1 bridges      — one IR, many frontends: identical numerics, build cost
+  E2 backends     — one IR, many backends: interpreter vs XLA agreement+speed
+  E3 autodiff     — IR-grad graph overhead + parity with jax.grad
+  E4 memory       — liveness/arena planner: reuse vs naive allocation
+  E5 layout       — transpose elimination/sinking census
+  E6 compounding  — decompose->fuse recovery; kernel-selection byte savings
+  E7 collectives  — gradient-compression pass wire-byte savings
+  E8 scaling      — dry-run roofline table (reads results/dryrun/*.json)
+
+Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
+diffing across commits.  ``python -m benchmarks.run [section ...]``
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def emit(section: str, name: str, value, unit: str = ""):
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{section},{name},{value},{unit}", flush=True)
+
+
+def _timeit(f, n=5):
+    f()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        f()
+    return (time.perf_counter() - t0) / n
+
+
+# =============================================================================
+def bench_bridges():
+    from repro.bridges import neon, onnx_like
+    from repro.transformers import get_transformer
+
+    net = neon.Sequential([neon.Dense(64, 256, activation="tanh", seed=1),
+                           neon.Dense(256, 10, name="out", seed=2)])
+    model = neon.Model(net)
+    t0 = time.perf_counter()
+    fn, names = neon.bridge_to_ir(model, (32, 64), loss="softmax_xent",
+                                  label_shape=(32,), with_grads=True)
+    emit("E1_bridges", "neon_bridge_build_ms",
+         (time.perf_counter() - t0) * 1e3, "ms")
+    emit("E1_bridges", "train_graph_nodes", len(fn.nodes()), "nodes")
+    doc = onnx_like.export_graph(fn)
+    emit("E1_bridges", "serialized_kb", len(doc) / 1024, "KiB")
+    fn2 = onnx_like.import_graph(doc)
+    x = np.random.default_rng(0).normal(size=(32, 64)).astype(np.float32)
+    labels = np.zeros((32,), np.int32)
+    args = [x, labels] + [model.param_values[n] for n in names]
+    a = get_transformer("jax").compile(fn)(*args)
+    b = get_transformer("jax").compile(fn2)(*args)
+    emit("E1_bridges", "import_export_max_abs_diff",
+         float(np.abs(np.asarray(a[0]) - np.asarray(b[0])).max()), "")
+
+
+def bench_backends():
+    from repro.core import ops
+    from repro.core.function import Function
+    from repro.transformers import get_transformer
+
+    x = ops.parameter((64, 512), "f32", "x")
+    w = ops.parameter((512, 512), "f32", "w")
+    g = ops.parameter((512,), "f32", "g")
+    h = ops.rms_norm(ops.gelu(ops.matmul(x.out(), w.out())), g.out())
+    fn = Function([x, w, g], [ops.softmax(h, -1)])
+    rng = np.random.default_rng(0)
+    args = [rng.normal(size=(64, 512)).astype(np.float32),
+            rng.normal(size=(512, 512)).astype(np.float32),
+            np.ones(512, np.float32)]
+    it = get_transformer("interpreter").compile(fn)
+    jt = get_transformer("jax").compile(fn)
+    d = float(np.abs(np.asarray(it(*args)[0]) - np.asarray(jt(*args)[0])).max())
+    emit("E2_backends", "interpreter_vs_xla_max_abs_diff", d, "")
+    emit("E2_backends", "interpreter_ms", _timeit(lambda: it(*args)) * 1e3, "ms")
+    emit("E2_backends", "xla_ms", _timeit(lambda: jt(*args)) * 1e3, "ms")
+
+
+def bench_autodiff():
+    import jax
+
+    from repro.core import ops
+    from repro.core.autodiff import grad
+    from repro.core.function import Function
+    from repro.transformers import get_transformer
+    from repro.transformers.jax_backend import emit_callable
+
+    x = ops.parameter((16, 128), "f32", "x")
+    w1 = ops.parameter((128, 256), "f32", "w1")
+    w2 = ops.parameter((256, 128), "f32", "w2")
+    lb = ops.parameter((16,), "i32", "labels")
+    h = ops.gelu(ops.matmul(x.out(), w1.out()))
+    logits = ops.matmul(h, w2.out())
+    loss = ops.reduce_mean(ops.softmax_cross_entropy(logits, lb.out()))
+    fn = Function([x, w1, w2, lb], [loss])
+    gfn = grad(fn, wrt=[1, 2])
+    emit("E3_autodiff", "fwd_nodes", len(fn.nodes()), "nodes")
+    emit("E3_autodiff", "grad_nodes", len(gfn.nodes()), "nodes")
+    emit("E3_autodiff", "grad_overhead_x",
+         len(gfn.nodes()) / len(fn.nodes()), "x")
+    rng = np.random.default_rng(1)
+    args = [rng.normal(size=(16, 128)).astype(np.float32),
+            rng.normal(size=(128, 256)).astype(np.float32),
+            rng.normal(size=(256, 128)).astype(np.float32),
+            rng.integers(0, 128, size=(16,)).astype(np.int32)]
+    outs = get_transformer("jax").compile(gfn)(*args)
+    fwd = emit_callable(fn)
+    jg = jax.grad(lambda w1, w2: fwd(args[0], w1, w2, args[3])[0],
+                  argnums=(0, 1))(args[1], args[2])
+    d = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+            for a, b in zip(outs[1:], jg))
+    emit("E3_autodiff", "ir_grad_vs_jax_grad_max_abs_diff", d, "")
+
+
+def _block_graph():
+    """A realistic transformer block (the memory/layout test subject)."""
+    from repro.core import ops
+    from repro.core.function import Function
+    B, S, D, H, F = 4, 128, 256, 8, 512
+    x = ops.parameter((B, S, D), "f32", "x")
+    g1 = ops.parameter((D,), "f32", "g1")
+    wq = ops.parameter((D, D), "f32", "wq")
+    wk = ops.parameter((D, D), "f32", "wk")
+    wv = ops.parameter((D, D), "f32", "wv")
+    wo = ops.parameter((D, D), "f32", "wo")
+    g2 = ops.parameter((D,), "f32", "g2")
+    wi = ops.parameter((D, F), "f32", "wi")
+    wo2 = ops.parameter((F, D), "f32", "wo2")
+    xn = ops.rms_norm(x.out(), g1.out())
+
+    def heads(v):
+        return ops.transpose(ops.reshape(v, (B, S, H, D // H)), (0, 2, 1, 3))
+
+    att = ops.attention(heads(ops.matmul(xn, wq.out())),
+                        heads(ops.matmul(xn, wk.out())),
+                        heads(ops.matmul(xn, wv.out())), causal=True)
+    att = ops.reshape(ops.transpose(att, (0, 2, 1, 3)), (B, S, D))
+    h = x.out() + ops.matmul(att, wo.out())
+    h2 = ops.rms_norm(h, g2.out())
+    out = h + ops.matmul(ops.gelu(ops.matmul(h2, wi.out())), wo2.out())
+    return Function([x, g1, wq, wk, wv, wo, g2, wi, wo2], [out])
+
+
+def bench_memory():
+    from repro.core.passes import plan_memory
+
+    fn = _block_graph()
+    plan = plan_memory(fn)
+    emit("E4_memory", "naive_MB", plan.naive_bytes / 1e6, "MB")
+    emit("E4_memory", "arena_MB", plan.arena_bytes / 1e6, "MB")
+    emit("E4_memory", "peak_live_MB", plan.peak_live_bytes / 1e6, "MB")
+    emit("E4_memory", "reuse_fraction", plan.reuse_fraction, "frac")
+    emit("E4_memory", "arena_over_peak",
+         plan.arena_bytes / max(plan.peak_live_bytes, 1), "x")
+
+
+def bench_layout():
+    from repro.core import ops
+    from repro.core.function import Function
+    from repro.core.passes import LayoutAssignment
+
+    a = ops.parameter((64, 128), "f32", "a")
+    b = ops.parameter((128, 64), "f32", "b")
+    t2 = ops.transpose(ops.transpose(a.out(), (1, 0)), (1, 0))
+    y = ops.matmul(t2, ops.transpose(ops.transpose(b.out(), (1, 0)), (1, 0)))
+    z = ops.matmul(ops.transpose(y, (1, 0)), a.out())
+    fn = Function([a, b], [z])
+    before = fn.op_counts().get("Transpose", 0)
+    out, stats = LayoutAssignment().run(fn)
+    emit("E5_layout", "transposes_before", before, "ops")
+    emit("E5_layout", "transposes_after", out.op_counts().get("Transpose", 0),
+         "ops")
+    for k, v in stats.items():
+        emit("E5_layout", k, v, "ops")
+
+
+def bench_compounding():
+    import jax.numpy as jnp
+
+    from repro.core.cost import function_cost
+    from repro.core.passes import Decompose, FuseCompounds
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import attention_ref
+
+    fn = _block_graph()
+    dec, dstats = Decompose().run(fn)
+    fused, fstats = FuseCompounds().run(dec)
+    emit("E6_compound", "decomposed_ops", dstats["expanded"], "ops")
+    for k, v in fstats.items():
+        emit("E6_compound", f"fused_{k}", v, "ops")
+    emit("E6_compound", "nodes_decomposed", len(dec.nodes()), "nodes")
+    emit("E6_compound", "nodes_fused", len(fused.nodes()), "nodes")
+    c_x = function_cost(fused, attn_impl="chunked")
+    c_f = function_cost(fused, attn_impl="flash")
+    emit("E6_compound", "attn_bytes_xla_MB", c_x.bytes / 1e6, "MB")
+    emit("E6_compound", "attn_bytes_flash_MB", c_f.bytes / 1e6, "MB")
+    emit("E6_compound", "kernel_byte_saving_x",
+         c_x.bytes / max(c_f.bytes, 1), "x")
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 128)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 128)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 128)), jnp.float32)
+    d = float(np.abs(np.asarray(
+        kops.flash_attention(q, k, v, causal=True, interpret=True)
+        - attention_ref(q, k, v, causal=True))).max())
+    emit("E6_compound", "pallas_flash_vs_oracle_max_abs_diff", d, "")
+
+
+def bench_collectives():
+    from repro.core import ops
+    from repro.core.function import Function
+    from repro.core.passes import CompressAllReduce
+
+    grads = [ops.parameter((1024, 1024), "f32", f"g{i}") for i in range(8)]
+    outs = [ops.all_reduce(p.out(), "data") for p in grads]
+    fn = Function(grads, outs)
+    comp, stats = CompressAllReduce().run(fn)
+
+    def wire(f):
+        return sum(n.inputs[0].type.nbytes for n in f.nodes()
+                   if n.op == "AllReduce")
+
+    emit("E7_collectives", "allreduce_wire_MB_f32", wire(fn) / 1e6, "MB")
+    emit("E7_collectives", "allreduce_wire_MB_bf16", wire(comp) / 1e6, "MB")
+    emit("E7_collectives", "compression_x", wire(fn) / wire(comp), "x")
+    emit("E7_collectives", "compressed_ops", stats["compressed"], "ops")
+
+
+def bench_scaling():
+    """The dry-run roofline table (claim E8 / deliverable g)."""
+    base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(base):
+        emit("E8_scaling", "dryrun_results", "missing:run repro.launch.dryrun",
+             "")
+        return
+    for mesh_name in sorted(os.listdir(base)):
+        mdir = os.path.join(base, mesh_name)
+        for f in sorted(os.listdir(mdir)):
+            with open(os.path.join(mdir, f)) as fh:
+                r = json.load(fh)
+            cell = f.replace(".json", "")
+            emit("E8_scaling", f"{mesh_name}/{cell}",
+                 f"{r['bottleneck']}:{r['roofline_fraction']:.3f}",
+                 "bottleneck:roofline")
+
+
+def bench_train_loop():
+    """End-to-end sanity: a reduced model trains (loss falls)."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+    from repro.models.train_graph import init_opt_state, make_train_step
+    from repro.runtime.data import DataConfig, SyntheticLM
+    from repro.transformers import get_transformer
+
+    cfg = get_config("deepseek-7b").reduced()
+    g = build_graphs(cfg, ShapeConfig("train", "train", 32, 8), 8)
+    ts = make_train_step(g, cfg)
+    params = g.builder.init_params(0)
+    m, v = init_opt_state(g.builder, cfg, params)
+    ex = get_transformer("jax").compile(ts.fn)
+    data = SyntheticLM(DataConfig(cfg.vocab, 32, 8))
+    flat = [params[n] for n in ts.param_names] + \
+        [m[n] for n in ts.param_names] + [v[n] for n in ts.param_names]
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(40):
+        batch = data.batch(step)
+        outs = ex(batch["tokens"], batch["labels"], np.int32(step), *flat)
+        losses.append(float(outs[0]))
+        flat = list(outs[1:])
+    emit("E2_backends", "train40_s", time.perf_counter() - t0, "s")
+    emit("E2_backends", "loss_first5", float(np.mean(losses[:5])), "nats")
+    emit("E2_backends", "loss_last5", float(np.mean(losses[-5:])), "nats")
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+SECTIONS = {
+    "bridges": bench_bridges,
+    "backends": bench_backends,
+    "autodiff": bench_autodiff,
+    "memory": bench_memory,
+    "layout": bench_layout,
+    "compounding": bench_compounding,
+    "collectives": bench_collectives,
+    "scaling": bench_scaling,
+    "train_loop": bench_train_loop,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    print("section,name,value,unit")
+    for name in which:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

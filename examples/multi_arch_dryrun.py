@@ -1,0 +1,13 @@
+"""Lower + compile any assigned architecture on the production mesh and
+print its roofline terms (a thin wrapper over repro.launch.dryrun).
+
+    python examples/multi_arch_dryrun.py --arch xlstm-350m --shape train_4k
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["--arch", "xlstm-350m",
+                                   "--shape", "train_4k"]))

@@ -1,0 +1,13 @@
+"""Batched serving: prefill + greedy decode through KV caches
+(deliverable b, inference path).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "deepseek-7b", "--reduced", "--batch", "4",
+                   "--prompt-len", "32", "--gen", "32"] + sys.argv[1:]))

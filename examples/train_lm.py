@@ -1,0 +1,22 @@
+"""End-to-end LM training on the synthetic pipeline: a ~100M-param
+llama-family model for a few hundred steps, with checkpointing and
+fault-tolerance hooks (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in args):
+        args += ["--steps", "300"]
+    # ~100M params: deepseek-7b family, scaled width/depth
+    sys.exit(main([
+        "--arch", "deepseek-7b", "--reduced",
+        "--batch", "16", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "100",
+        "--log-every", "20",
+    ] + args))

@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md tables from results/dryrun JSONs."""
+import json
+import os
+import sys
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def load(mesh, d="dryrun"):
+    out = {}
+    mdir = os.path.join(BASE, d, mesh)
+    if not os.path.isdir(mdir):
+        return out
+    for f in sorted(os.listdir(mdir)):
+        with open(os.path.join(mdir, f)) as fh:
+            out[f[:-5]] = json.load(fh)
+    return out
+
+
+def roofline_table(mesh="pod16x16"):
+    rows = load(mesh)
+    print(f"\n### Roofline — {mesh} ({next(iter(rows.values()))['n_devices']} chips)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+          "| useful-FLOPs | roofline | mem/dev GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for k, r in rows.items():
+        arch, shape = k.split("__")
+        print(f"| {arch} | {shape} | {r['t_compute_s']:.3f}s "
+              f"| {r['t_memory_s']:.3f}s | {r['t_collective_s']:.3f}s "
+              f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+              f"| **{r['roofline_fraction']:.3f}** "
+              f"| {fmt_bytes(r['per_device_memory_bytes'])} |")
+
+
+def dryrun_table(mesh="pod2x16x16"):
+    rows = load(mesh)
+    print(f"\n### Dry-run — {mesh}\n")
+    print("| arch | shape | compile s | params | HLO flops/dev | "
+          "collectives (scan-scaled) | mem/dev GiB |")
+    print("|---|---|---|---|---|---|---|")
+    for k, r in rows.items():
+        arch, shape = k.split("__")
+        colls = ", ".join(f"{kk}:{vv}" for kk, vv in
+                          sorted(r["collective_counts"].items()))
+        print(f"| {arch} | {shape} | {r['compile_s']} | "
+              f"{r['n_params']/1e9:.1f}B | {r['hlo_flops_per_dev']:.2e} | "
+              f"{colls or '—'} | {fmt_bytes(r['per_device_memory_bytes'])} |")
+
+
+def perf_compare(cell, runs):
+    """runs: list of (label, dir-under-results)."""
+    print(f"\n### {cell}\n")
+    print("| version | t_compute | t_memory | t_collective | bottleneck | "
+          "roofline | mem/dev GiB |")
+    print("|---|---|---|---|---|---|---|")
+    for label, d in runs:
+        path = os.path.join(BASE, d, f"{cell}.json")
+        if not os.path.exists(path):
+            path = os.path.join(BASE, d, "pod16x16", f"{cell}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as fh:
+            r = json.load(fh)
+        print(f"| {label} | {r['t_compute_s']:.3f}s | {r['t_memory_s']:.3f}s "
+              f"| {r['t_collective_s']:.3f}s | {r['bottleneck']} "
+              f"| **{r['roofline_fraction']:.3f}** "
+              f"| {fmt_bytes(r['per_device_memory_bytes'])} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline"):
+        roofline_table("pod16x16")
+    if which in ("all", "dryrun"):
+        dryrun_table("pod2x16x16")
+    if which in ("all", "perf"):
+        for cell in ("qwen1.5-110b__train_4k", "deepseek-v3-671b__train_4k",
+                     "recurrentgemma-9b__train_4k"):
+            perf_compare(cell, [
+                ("baseline (paper-faithful, licm on)",
+                 "perf/iter0b_baseline/pod16x16"),
+                ("iter2: chunked attention VJP", "perf/iter2_chunked/pod16x16"),
+                ("iter3: licm off", "perf/iter3_licm/pod16x16"),
+                ("iter5: MoE dispatch sharding",
+                 "perf/iter5_moe_shard/pod16x16"),
+                ("iter7: block-diag RG gates",
+                 "perf/iter7_rg_blockdiag/pod16x16"),
+                ("iter8: 4-way grad accumulation",
+                 "perf/iter8_micro4/pod16x16"),
+                ("iter8b: 16-way grad accumulation",
+                 "perf/iter8_micro16/pod16x16"),
+                ("final default", "dryrun/pod16x16"),
+            ])

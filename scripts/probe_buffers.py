@@ -1,0 +1,78 @@
+"""Perf probe: compile one cell and census the largest per-device
+instruction shapes in the optimized HLO (the 'profile' the dry-run gives
+us; see EXPERIMENTS.md sec. Perf)."""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import re
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen1.5-110b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+vjp = sys.argv[3] if len(sys.argv) > 3 else "auto"
+
+from repro.core import autodiff
+autodiff.set_attention_vjp(vjp)
+
+import jax
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.lm import build_graphs
+from repro.models.train_graph import make_train_step
+from repro.transformers import get_transformer
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import train_step_shardings, graph_shardings
+
+cfg = get_config(arch)
+sh = SHAPES[shape]
+mesh = make_production_mesh()
+graphs = build_graphs(cfg, sh)
+jt = get_transformer("jax")
+if sh.kind == "train":
+    ts = make_train_step(graphs, cfg)
+    ins, outs, donate, rules = train_step_shardings(ts, mesh)
+    fn = ts.fn
+    kw = dict(in_shardings=ins, out_shardings=outs, donate_argnums=donate)
+else:
+    ins, rules = graph_shardings(graphs, mesh)
+    fn = graphs.fn
+    kw = dict(in_shardings=ins)
+jitted = jt.jit(fn, mode="pjit", mesh=mesh, axis_rules=rules, **kw)
+args = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in fn.in_types]
+with mesh:
+    compiled = jitted.lower(*args).compile()
+mem = compiled.memory_analysis()
+print(f"temp={mem.temp_size_in_bytes/2**30:.1f}GiB "
+      f"args={mem.argument_size_in_bytes/2**30:.1f}GiB "
+      f"out={mem.output_size_in_bytes/2**30:.1f}GiB "
+      f"alias={mem.alias_size_in_bytes/2**30:.1f}GiB")
+
+DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+      "f32": 4, "s64": 8, "f64": 8}
+pat = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]+)\]\S*\s+([\w\-]+)\(")
+sizes = defaultdict(lambda: [0, 0])  # (dtype, shape, op) -> [count, bytes]
+for line in compiled.as_text().splitlines():
+    m = pat.search(line)
+    if not m:
+        continue
+    dt, dims, op = m.groups()
+    if dt not in DT:
+        continue
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    key = (op, f"{dt}[{dims}]")
+    sizes[key][0] += 1
+    sizes[key][1] = n * DT[dt]
+
+top = sorted(sizes.items(), key=lambda kv: -kv[1][1])[:25]
+print("\nlargest per-device instruction shapes:")
+for (op, ty), (cnt, b) in top:
+    print(f"  {b/2**30:8.2f} GiB x{cnt:<4d} {op:24s} {ty}")

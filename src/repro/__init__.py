@@ -1,0 +1,11 @@
+"""repro: Intel nGraph (SysML'18) reproduced as a JAX/TPU compiler stack.
+
+Public API:
+    from repro import ng                  # functional IR frontend (ops)
+    from repro.core import Function
+    from repro.transformers import get_transformer
+"""
+from .core import ops as ng  # noqa: F401
+from .core import Function, Node, TensorType, Value  # noqa: F401
+
+__version__ = "1.0.0"

@@ -1,0 +1,50 @@
+"""Constant folding: evaluate nodes whose inputs are all Constants using
+the interpreter's op table (one evaluator, two uses — same trick nGraph's
+INTERPRETER backend enables)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .. import ops
+from ..function import Function, transform
+from ..node import Node, Value
+from .base import Pass
+
+# ops never folded (stateful-ish / distribution / control)
+_SKIP = {"Parameter", "Constant", "Scan", "AllReduce", "AllGather",
+         "ReduceScatter", "AllToAll", "CollectivePermute",
+         "ShardingConstraint", "StopGradient"}
+
+_MAX_FOLD_ELEMS = 1 << 22  # don't materialize constants > 4M elements
+
+
+class ConstantFolding(Pass):
+    name = "constant-folding"
+
+    def run(self, fn: Function):
+        from ...transformers.interpreter import EVAL
+
+        stats = {"folded": 0}
+
+        def rule(node: Node, new_inputs: List[Value]) -> Optional[List[Value]]:
+            if node.op in _SKIP or node.op not in EVAL:
+                return None
+            if not new_inputs:
+                if node.op != "Iota":
+                    return None
+            if not all(v.node.op == "Constant" for v in new_inputs):
+                return None
+            if sum(t.size for t in node.out_types) > _MAX_FOLD_ELEMS:
+                return None
+            args = [v.node.attrs["value"] for v in new_inputs]
+            try:
+                outs = EVAL[node.op](node, args)
+            except Exception:
+                return None
+            stats["folded"] += 1
+            return [ops.constant(np.ascontiguousarray(o), dtype=t.dtype)
+                    for o, t in zip(outs, node.out_types)]
+
+        return transform(fn, rule, name=fn.name), stats

@@ -1,0 +1,284 @@
+"""Pattern-matched compounding of operations (paper sec. 1/4:
+"HW-specific compounding of operations", MKL-DNN-style fused kernels).
+
+Detects decomposed primitive subgraphs and replaces them with compound ops
+(Silu, Gelu, Softmax, RMSNorm, Attention) that the backend transformer can
+map to fused kernels (Pallas on TPU).  The inverse of ``Decompose``;
+``tests/test_passes.py`` round-trips decompose -> fuse.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import numpy as np
+
+from .. import ops
+from ..function import Function, transform
+from ..node import Node, Value
+from ..pattern import (Pat, any_, const_, is_scalar_const, match, op_,
+                       scalar_of, skip_, skip_reshape)
+from .base import Pass
+
+
+def _bcast_of(p: Pat) -> Pat:
+    return op_("BroadcastInDim", skip_(("Reshape",), p))
+
+
+# silu: Multiply(x, Sigmoid(x))
+_SILU = op_("Multiply", any_("x"), op_("Sigmoid", any_("x")), commutative=True)
+
+# gelu: Multiply(Multiply(bcast(0.5), x), Add(bcast(1), Erf(Multiply(x, bcast(1/sqrt2)))))
+_GELU = op_(
+    "Multiply",
+    op_("Multiply", _bcast_of(const_(0.5)), any_("x"), commutative=True),
+    op_("Add", _bcast_of(const_(1.0)),
+        op_("Erf", op_("Multiply", any_("x"), _bcast_of(const_(1.0 / math.sqrt(2.0), tol=1e-6)),
+                       commutative=True)),
+        commutative=True),
+    commutative=True,
+)
+
+# softmax: Divide(e, bcast(ReduceSum(e))) where e = Exp(Sub(x, bcast(ReduceMax(x))))
+_EXP = op_("Exp", op_("Subtract", any_("x"),
+                      _bcast_of(op_("ReduceMax", any_("x"), capture="rmax"))),
+           capture="e")
+_SOFTMAX = op_("Divide", _EXP, _bcast_of(op_("ReduceSum", Pat(capture="e"),
+                                             capture="rsum")))
+
+
+def _axes_of(v: Value):
+    return v.node.attrs["axes"]
+
+
+class FuseCompounds(Pass):
+    name = "fuse-compounds"
+
+    def run(self, fn: Function):
+        stats = {"silu": 0, "gelu": 0, "softmax": 0, "rmsnorm": 0, "attention": 0}
+
+        def rule(node: Node, ins: List[Value]) -> Optional[List[Value]]:
+            cand = Node(node.op, ins, dict(node.attrs), node.out_types)
+            v = cand.out(0) if cand.n_outputs else None
+            if v is None:
+                return None
+            m = match(_SILU, v)
+            if m is not None:
+                stats["silu"] += 1
+                return [ops.silu(m["x"])]
+            m = match(_GELU, v)
+            if m is not None:
+                stats["gelu"] += 1
+                return [ops.gelu(m["x"])]
+            m = match(_SOFTMAX, v)
+            if m is not None:
+                ax_max = _axes_of(m["rmax"])
+                ax_sum = _axes_of(m["rsum"])
+                if ax_max == ax_sum and len(ax_max) == 1 and \
+                        m["rmax"].node.attrs["keepdims"] and \
+                        m["rsum"].node.attrs["keepdims"]:
+                    stats["softmax"] += 1
+                    return [ops.softmax(m["x"], axis=ax_max[0])]
+            out = self._match_rmsnorm(v)
+            if out is not None:
+                stats["rmsnorm"] += 1
+                return [out]
+            out = self._match_attention(v)
+            if out is not None:
+                stats["attention"] += 1
+                return [out]
+            return None
+
+        # two rounds: attention matches Softmax nodes produced in round 1
+        out_fn = transform(fn, rule, name=fn.name)
+        out_fn = transform(out_fn, rule, name=fn.name)
+        return out_fn, stats
+
+    # -- rmsnorm (matches Decompose's expansion) ---------------------------
+    def _match_rmsnorm(self, v: Value) -> Optional[Value]:
+        # Convert(Multiply(Multiply(xf, bcast(r)), bcast(wf)))  [maybe no Convert]
+        node = v.node
+        if node.op == "Convert":
+            inner = node.inputs[0]
+        else:
+            inner = v
+        if inner.node.op != "Multiply":
+            return None
+        lhs, rhs = inner.node.inputs
+        # rhs: BroadcastInDim(Convert(w)) or BroadcastInDim(w)
+        if rhs.node.op != "BroadcastInDim":
+            return None
+        w = skip_reshape(rhs.node.inputs[0])
+        if w.node.op == "Convert":
+            w = w.node.inputs[0]
+        if w.rank != 1:
+            return None
+        if lhs.node.op != "Multiply":
+            return None
+        xf, rb = lhs.node.inputs
+        if rb.node.op != "BroadcastInDim":
+            xf, rb = rb, xf
+        if rb.node.op != "BroadcastInDim":
+            return None
+        r = skip_reshape(rb.node.inputs[0])
+        if r.node.op != "Rsqrt":
+            return None
+        add = r.node.inputs[0]
+        if add.node.op != "Add":
+            return None
+        var, eps_v = add.node.inputs
+        if not is_scalar_const(eps_v) and not (
+                eps_v.node.op == "BroadcastInDim" and is_scalar_const(eps_v.node.inputs[0])):
+            var, eps_v = eps_v, var
+        if eps_v.node.op == "BroadcastInDim":
+            eps_v = eps_v.node.inputs[0]
+        if not is_scalar_const(eps_v):
+            return None
+        # var = Multiply(ReduceSum(x*x, keepdims), 1/n) (reduce_mean builder)
+        if var.node.op != "Multiply":
+            return None
+        rs, inv_n = var.node.inputs
+        if rs.node.op != "ReduceSum":
+            rs, inv_n = inv_n, rs
+        if rs.node.op != "ReduceSum" or not rs.node.attrs["keepdims"]:
+            return None
+        if rs.node.attrs["axes"] != (xf.rank - 1,):
+            return None
+        sq = rs.node.inputs[0]
+        if sq.node.op != "Multiply" or sq.node.inputs[0] != sq.node.inputs[1]:
+            return None
+        if sq.node.inputs[0] != xf:
+            return None
+        x = xf
+        if x.node.op == "Convert":
+            x = x.node.inputs[0]
+        if w.shape != (x.shape[-1],):
+            return None
+        eps = scalar_of(eps_v)
+        fused = ops.rms_norm(x, w, eps=eps)
+        if fused.dtype != v.dtype:
+            fused = ops.convert(fused, v.dtype)
+        if fused.shape != v.shape:
+            return None
+        return fused
+
+    # -- attention (matches Decompose's expansion, after softmax fusion) ----
+    def _match_attention(self, v: Value) -> Optional[Value]:
+        node = v.node
+        if node.op != "DotGeneral":
+            return None
+        if node.attrs["contracting"] != ((4,), (2,)) or \
+                node.attrs["batch"] != ((0, 1), (0, 1)):
+            return None
+        p, vf = node.inputs
+        if p.node.op != "Softmax" or p.node.attrs["axis"] != 4:
+            return None
+        sel = p.node.inputs[0]
+        causal = False
+        window = None
+        q_offset = None
+        if sel.node.op == "Select":
+            maskb, scores, negb = sel.node.inputs
+            if negb.node.op != "BroadcastInDim" or \
+                    not is_scalar_const(negb.node.inputs[0]):
+                return None
+            mask_flags = self._mask_flags(maskb)
+            if mask_flags is None:
+                return None
+            causal, window, q_offset = mask_flags
+        else:
+            scores = sel
+        if scores.node.op != "Multiply":
+            return None
+        dqk, scaleb = scores.node.inputs
+        if dqk.node.op != "DotGeneral":
+            dqk, scaleb = scaleb, dqk
+        if dqk.node.op != "DotGeneral":
+            return None
+        if scaleb.node.op != "BroadcastInDim" or not is_scalar_const(scaleb.node.inputs[0]):
+            return None
+        scale = scalar_of(scaleb.node.inputs[0])
+        if dqk.node.attrs["contracting"] != ((4,), (3,)) or \
+                dqk.node.attrs["batch"] != ((0, 1), (0, 1)):
+            return None
+        q5, kf = dqk.node.inputs
+        if q5.node.op != "Reshape":
+            return None
+        qf = q5.node.inputs[0]
+        q = qf.node.inputs[0] if qf.node.op == "Convert" else qf
+        k = kf.node.inputs[0] if kf.node.op == "Convert" else kf
+        vv = vf.node.inputs[0] if vf.node.op == "Convert" else vf
+        if q.rank != 4 or k.rank != 4 or vv.rank != 4:
+            return None
+        B, Hq, Sq, D = q.shape
+        if k.shape[1] == 0 or Hq % k.shape[1]:
+            return None
+        att = ops.attention(q, k, vv, causal=causal, window=window, scale=scale,
+                            q_offset=q_offset)
+        out = ops.reshape(ops.convert(att, "f32"), v.shape)
+        return out
+
+    def _mask_flags(self, maskb: Value):
+        """Recover (causal, window, q_offset) from the mask subgraph."""
+        if maskb.node.op != "BroadcastInDim":
+            return None
+        m = skip_reshape(maskb.node.inputs[0])
+        causal, window, q_offset = False, None, None
+
+        def walk(val: Value) -> bool:
+            nonlocal causal, window, q_offset
+            n = val.node
+            if n.op == "And":
+                return walk(n.inputs[0]) and walk(n.inputs[1])
+            if n.op == "BroadcastInDim" and n.inputs[0].node.op == "Constant":
+                return bool(np.all(n.inputs[0].node.attrs["value"]))
+            if n.op == "LessEqual":
+                kpos, qpos = n.inputs
+                if kpos.node.op == "Iota" and kpos.node.attrs["dim"] == 1:
+                    causal = True
+                    q_offset_v = self._offset_of(qpos)
+                    if q_offset_v is not None:
+                        q_offset = q_offset_v
+                    return True
+                return False
+            if n.op == "Greater":
+                kpos, rhs = n.inputs
+                if kpos.node.op != "Iota" or kpos.node.attrs["dim"] != 1:
+                    return False
+                if rhs.node.op != "Subtract":
+                    return False
+                qpos, wb = rhs.node.inputs
+                q_offset_v = self._offset_of(qpos)
+                if q_offset_v is not None:
+                    q_offset = q_offset_v
+                if is_scalar_const(wb):
+                    window_val = scalar_of(wb)
+                elif wb.node.op == "BroadcastInDim" and is_scalar_const(wb.node.inputs[0]):
+                    window_val = scalar_of(wb.node.inputs[0])
+                else:
+                    return False
+                window = int(window_val)
+                return True
+            return False
+
+        if not walk(m):
+            return None
+        return causal, window, q_offset
+
+    @staticmethod
+    def _offset_of(qpos: Value) -> Optional[Value]:
+        """qpos is Iota(dim=0) (no offset) or Add(Iota, bcast(reshape(off)))."""
+        n = qpos.node
+        if n.op == "Iota":
+            return None
+        if n.op == "Add":
+            a, b = n.inputs
+            if a.node.op != "Iota":
+                a, b = b, a
+            if a.node.op != "Iota":
+                return None
+            off = b
+            while off.node.op in ("BroadcastInDim", "Reshape"):
+                off = off.node.inputs[0]
+            return off
+        return None

@@ -1,0 +1,93 @@
+"""jit'd wrappers + support predicates for the Pallas kernel library.
+
+This module is the *kernel-selection surface* the JAX transformer consults
+(paper sec. 4: transformers combine "tensor-element layout and shape
+management with backend kernel selection").  Each ``*_supported`` predicate
+encodes the shape/alignment constraints of the corresponding TPU kernel;
+unsupported shapes fall back to the transformer's generic emission.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .matmul import matmul as _matmul
+from .rmsnorm import rmsnorm_fwd as _rmsnorm
+from .xla_attention import chunked_attention  # noqa: F401  (re-export)
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def _pick_block(size: int, target: int, align: int) -> Optional[int]:
+    """Largest divisor of ``size`` that is <= target and a multiple of
+    ``align`` (or == size when size < align)."""
+    if size <= align:
+        return size
+    b = min(target, size)
+    b -= b % align
+    while b >= align:
+        if size % b == 0:
+            return b
+        b -= align
+    return size if size % align == 0 or size <= align else None
+
+
+# -- rmsnorm -----------------------------------------------------------------
+def rmsnorm_supported(shape: Tuple[int, ...]) -> bool:
+    if len(shape) < 1:
+        return False
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    return d % _LANE == 0 and rows % _SUBLANE == 0
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            interpret: bool = True) -> jax.Array:
+    return _rmsnorm(x, w, eps=eps, interpret=interpret)
+
+
+# -- matmul --------------------------------------------------------------------
+def matmul_supported(m: int, k: int, n: int) -> bool:
+    return m % _LANE == 0 and k % _LANE == 0 and n % _LANE == 0
+
+
+def matmul(a: jax.Array, b: jax.Array, interpret: bool = True, **kw) -> jax.Array:
+    M, K = a.shape
+    _, N = b.shape
+    bm = _pick_block(M, kw.pop("bm", 256), _LANE) or M
+    bn = _pick_block(N, kw.pop("bn", 256), _LANE) or N
+    bkk = _pick_block(K, kw.pop("bk", 512), _LANE) or K
+    return _matmul(a, b, bm=bm, bn=bn, bk=bkk, interpret=interpret)
+
+
+# -- attention ------------------------------------------------------------------
+def attention_supported(q_shape: Tuple[int, ...],
+                        k_shape: Tuple[int, ...]) -> bool:
+    """Flash kernel constraints: 4D BHSD, Sq/Skv tileable, D lane-aligned."""
+    if len(q_shape) != 4 or len(k_shape) != 4:
+        return False
+    B, Hq, Sq, Dk = q_shape
+    _, Hkv, Skv, _ = k_shape
+    if Hkv == 0 or Hq % Hkv:
+        return False
+    if Dk % _LANE:
+        return False
+    bq = _pick_block(Sq, 256, _LANE)
+    bk = _pick_block(Skv, 512, _LANE)
+    return bq is not None and bk is not None
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    q_offset=None, interpret: bool = True) -> jax.Array:
+    B, Hq, Sq, Dk = q.shape
+    Skv = k.shape[2]
+    bq = _pick_block(Sq, 256, _LANE) or Sq
+    bk = _pick_block(Skv, 512, _LANE) or Skv
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  q_offset=q_offset, bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,91 @@
+"""Memory-efficient (chunked online-softmax) attention in pure XLA.
+
+This is the *XLA-backend* realization of the Attention compound op for
+long sequences — the flash algorithm expressed with ``lax.scan`` over KV
+chunks, so peak memory is O(Sq * bk) instead of O(Sq * Skv).  The Pallas
+kernel (``flash_attention.py``) is the TPU-transformer realization; this
+one compiles on any XLA backend (and is what the 512-device dry run
+lowers, since Pallas TPU kernels cannot compile on the CPU backend).
+
+Semantics identical to ``ref.attention_ref``: GQA, causal, sliding
+window, decode q_offset, Dv != Dk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "bk"))
+def chunked_attention(
+    q: jax.Array,  # (B, Hq, Sq, Dk)
+    k: jax.Array,  # (B, Hkv, Skv, Dk)
+    v: jax.Array,  # (B, Hkv, Skv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: Optional[jax.Array] = None,
+    bk: int = 1024,
+) -> jax.Array:
+    B, Hq, Sq, Dk = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / (Dk ** 0.5)
+    rep = Hq // Hkv
+    bk = min(bk, Skv)
+    if Skv % bk:
+        raise ValueError(f"Skv={Skv} not divisible by chunk {bk}")
+    n_chunks = Skv // bk
+
+    off = jnp.asarray(0, jnp.int32) if q_offset is None else \
+        jnp.asarray(q_offset, jnp.int32).reshape(())
+    q_pos = jnp.arange(Sq, dtype=jnp.int32) + off  # (Sq,)
+
+    # grouped query layout (B, Hkv, rep, Sq, Dk): contraction against
+    # un-repeated kv — no head-repeat materialization.
+    qg = q.reshape(B, Hkv, rep, Sq, Dk)
+    kc = k.reshape(B, Hkv, n_chunks, bk, Dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, bk, Dv).transpose(2, 0, 1, 3, 4)
+    chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
+
+    def step(carry, chunk):
+        m_prev, l_prev, acc = carry
+        ci, kb, vb = chunk  # (), (B,Hkv,bk,Dk), (B,Hkv,bk,Dv)
+        k_pos = ci * bk + jnp.arange(bk, dtype=jnp.int32)  # (bk,)
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, bk), dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)  # (B,Hkv,rep,Sq)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(jnp.where(m_new <= NEG_INF / 2, 0.0, m_prev - m_new))
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, rep, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, acc0), (chunk_ids, kc, vc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    return out.reshape(B, Hq, Sq, Dv)

@@ -1,0 +1,190 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and record memory / cost / collective analysis.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step).lower(*ShapeDtypeStructs).compile()`` must succeed for
+the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for every cell.
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md sec. Dry-run / sec. Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+      --shape train_4k [--multi-pod] [--all] [--attn-impl auto]
+"""
+# The placeholder-device flag MUST precede any jax import (jax locks the
+# device count on first init).  Do not set this anywhere global.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import List, Optional  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+
+def _cell(arch: str, shape_name: str, multi_pod: bool, attn_impl: str = "auto",
+          out_dir: str = "results/dryrun", remat: bool = False,
+          force: bool = False, save: bool = True,
+          attn_vjp: str = "auto", n_micro: int = 1) -> Optional[dict]:
+    import jax
+
+    from ..core import autodiff
+    autodiff.set_attention_vjp(attn_vjp)
+
+    from ..configs import get_config
+    from ..configs.base import SHAPES, supported_shapes
+    from ..models.lm import build_graphs
+    from ..models.train_graph import make_train_step
+    from ..transformers import get_transformer
+    from .mesh import make_production_mesh
+    from .roofline import Roofline, model_flops_for, parse_collectives
+    from .shardings import graph_shardings, train_step_shardings
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch.replace('/', '_')}__{shape_name}"
+    out_path = os.path.join(out_dir, mesh_name, f"{tag}.json")
+    if save and not force and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape not in supported_shapes(cfg):
+        print(f"[skip] {arch} x {shape_name}: unsupported "
+              f"(full-attention arch at 500k)")
+        return None
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    mb = shape.global_batch // n_micro if shape.kind == "train" else \
+        shape.global_batch
+    graphs = build_graphs(cfg, shape, mb)
+    jt = get_transformer("jax")
+
+    if shape.kind == "train":
+        ts = make_train_step(graphs, cfg, n_micro=n_micro)
+        ins, outs, donate, rules = train_step_shardings(ts, mesh)
+        fn = ts.fn
+        jit_kw = dict(in_shardings=ins, out_shardings=outs,
+                      donate_argnums=donate)
+    else:
+        ins, rules = graph_shardings(graphs, mesh)
+        fn = graphs.fn
+        jit_kw = dict(in_shardings=ins)
+
+    jitted = jt.jit(fn, mode="pjit", mesh=mesh, axis_rules=rules,
+                    attn_impl=attn_impl, **jit_kw)
+    args = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in fn.in_types]
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    census = parse_collectives(hlo, n_dev)
+    peak_bytes = (getattr(mem, "argument_size_in_bytes", 0)
+                  + getattr(mem, "output_size_in_bytes", 0)
+                  + getattr(mem, "temp_size_in_bytes", 0)
+                  - getattr(mem, "alias_size_in_bytes", 0))
+    from ..core.cost import function_cost
+    ir_cost = function_cost(fn, attn_impl="chunked")
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_dev,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        ir_flops=ir_cost.flops,
+        ir_bytes=ir_cost.bytes,
+        collective_bytes=census.total_tpu_bytes,
+        model_flops=model_flops_for(graphs.builder, cfg, shape.kind,
+                                    shape.seq_len, shape.global_batch),
+        collectives=census.counts,
+        coll_bytes_by_kind=census.bytes_by_kind,
+        per_device_memory=float(peak_bytes),
+    )
+    rec = rl.to_dict()
+    rec.update({
+        "collective_bytes_as_compiled": census.total_bytes,
+        "n_params": graphs.builder.n_params(),
+        "graph_nodes": len(fn.nodes()),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "attn_impl": attn_impl,
+        "n_micro": n_micro,
+        "hlo_collective_lines": sum(census.counts.values()),
+    })
+    print(f"[ok] {mesh_name} {tag}: compile={t_compile:.0f}s "
+          f"mem/dev={peak_bytes / 2**30:.2f}GiB "
+          f"flops/dev={rl.hlo_flops:.3g} "
+          f"t=(c {rl.t_compute:.3f}|m {rl.t_memory:.3f}|x {rl.t_collective:.3f})s "
+          f"bottleneck={rl.bottleneck} roofline={rl.roofline_fraction:.3f}")
+    if save:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--attn-vjp", default="auto",
+                    choices=["auto", "full", "chunked"])
+    ap.add_argument("--licm", default="off", choices=["on", "off"],
+                    help="XLA while-loop-invariant code motion.  'off' "
+                         "(default) stops XLA hoisting f32 converts of "
+                         "the residual stack out of backward scans "
+                         "(EXPERIMENTS.md sec. Perf iter 3)")
+    ap.add_argument("--n-micro", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    if args.licm == "off":
+        os.environ["XLA_FLAGS"] += \
+            " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+
+    from ..configs import ARCHS
+    from ..configs.base import SHAPES
+
+    archs = args.arch or (ARCHS if args.all else ARCHS[:1])
+    shapes = args.shape or list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    _cell(a, s, mp, attn_impl=args.attn_impl,
+                          out_dir=args.out_dir, force=args.force,
+                          attn_vjp=args.attn_vjp, n_micro=args.n_micro)
+                except Exception as e:  # record and continue
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[FAIL] {a} x {s} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nDRY-RUN GREEN")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

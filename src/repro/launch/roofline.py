@@ -1,0 +1,278 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+TARGET hardware (TPU v5e-class constants; the CPU here only *compiles*):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``cost_analysis()`` supplies FLOPs/bytes of the per-device SPMD program.
+Collective bytes are NOT in cost_analysis: we parse the post-partitioning
+HLO (``compiled.as_text()``) and sum result sizes of every collective op,
+weighted by the standard ring factors for its replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# -- target-hardware constants (TPU v5e-class chip) -------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# `%name = TYPE op-name(' where TYPE is `dt[dims]` or a tuple of them
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:  # iota format [n_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveCensus:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]  # ring-weighted wire bytes per device
+    tpu_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_tpu_bytes(self) -> float:
+        """bf16-corrected estimate: XLA-CPU's float-normalization rewrites
+        every bf16 op (and its collectives) to f32; on TPU those wires are
+        bf16, so f32 collectives are counted at half size.  True-f32
+        collectives (master-grad reductions) are halved too — a noted
+        ~5% underestimate, bounded by their small share."""
+        return sum(self.tpu_bytes_by_kind.values()) or self.total_bytes
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CMP_RE = re.compile(r"compare\(")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            # computation header: `name (params...) -> type {` — no `=`
+            # before the opening paren (instructions have `%x = ...`)
+            m = _COMP_RE.match(stripped)
+            if (m and stripped.endswith("{")
+                    and "=" not in stripped.split("(", 1)[0]
+                    and "->" in stripped):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _while_scales(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution multiplier per computation: while-loop bodies run
+    trip-count times (nested loops multiply).  Trip count is recovered
+    from the largest integer constant in the condition computation."""
+    edges: List[Tuple[str, str, float]] = []  # (parent, body, trip)
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                # trip count = the constant the loop counter is compared
+                # against (scan conditions are `i < N`); only look at
+                # compare/constant lines to avoid unrelated constants
+                cond_lines = comps.get(cond, [])
+                trips = [int(c) for ln in cond_lines if _CMP_RE.search(ln)
+                         for c in _CONST_RE.findall(ln)]
+                if not trips:  # constant defined on its own line
+                    trips = [int(c) for ln in cond_lines
+                             if "= s32[] constant(" in ln
+                             for c in _CONST_RE.findall(ln)]
+                trips = [t for t in trips if t > 0]
+                trip = float(min(trips)) if trips else 1.0
+                edges.append((name, body, trip))
+                edges.append((name, cond, trip))
+    scale = {name: 1.0 for name in comps}
+    for _ in range(8):  # propagate through nesting (fixed point)
+        changed = False
+        for parent, child, trip in edges:
+            want = scale.get(parent, 1.0) * trip
+            if child in scale and abs(scale[child] - want) > 1e-9:
+                scale[child] = want
+                changed = True
+        if not changed:
+            break
+    return scale
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveCensus:
+    """Sum ring-weighted wire bytes of every collective, scaling ops that
+    live inside while-loop (scan) bodies by the loop trip count — XLA's
+    own cost analysis misses that multiplier."""
+    comps = _split_computations(hlo_text)
+    scales = _while_scales(comps)
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, float] = {}
+    tpu_by_kind: Dict[str, float] = {}
+    for cname, lines in comps.items():
+        mult = scales.get(cname, 1.0)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done" in line.split("=", 1)[-1][:40]:
+                continue
+            type_str, kind = m.group(1), m.group(2)
+            size = _shape_bytes(type_str)
+            g = _group_size(line, n_devices)
+            if g <= 1:
+                continue
+            ring = (g - 1) / g
+            if kind == "all-gather":
+                wire = size * ring                # result held per device
+            elif kind == "all-reduce":
+                wire = 2.0 * size * ring          # RS + AG ring
+            elif kind == "reduce-scatter":
+                wire = size * (g - 1)             # result is the shard
+            elif kind == "all-to-all":
+                wire = size * ring
+            else:  # collective-permute
+                wire = size
+            counts[kind] = counts.get(kind, 0) + int(mult)
+            by_kind[kind] = by_kind.get(kind, 0.0) + wire * mult
+            # bf16-on-TPU correction (see total_tpu_bytes)
+            all_dts = _SHAPE_RE.findall(type_str)
+            factor = 0.5 if all_dts and all(dt == "f32" for dt, _ in all_dts) \
+                else 1.0
+            tpu_by_kind[kind] = tpu_by_kind.get(kind, 0.0) + \
+                wire * mult * factor
+    return CollectiveCensus(counts, by_kind, tpu_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float            # per device, from cost_analysis (scan bodies x1!)
+    hlo_bytes: float            # per device, from cost_analysis (ditto)
+    ir_flops: float             # GLOBAL, from the IR cost model (scan-exact)
+    ir_bytes: float             # GLOBAL HBM-traffic estimate, scan-exact
+    collective_bytes: float     # ring-weighted wire bytes per device
+    model_flops: float          # analytic 6ND (train) / 2ND (inference), global
+    collectives: Dict[str, int]
+    coll_bytes_by_kind: Dict[str, float]
+    per_device_memory: float    # peak per-device bytes (memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        return self.ir_flops / self.n_devices / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.ir_bytes / self.n_devices / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs: how much of the compiled compute
+        is 'useful' (catches remat/redundancy waste)."""
+        return self.model_flops / self.ir_flops if self.ir_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs utilization if the step ran at the max of the three
+        terms (the achievable-MFU proxy this report scores)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        denom = t * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "ir_flops_global": self.ir_flops,
+            "ir_bytes_global": self.ir_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_counts": self.collectives,
+            "collective_bytes_by_kind": self.coll_bytes_by_kind,
+            "per_device_memory_bytes": self.per_device_memory,
+        }
+
+
+def model_flops_for(builder, cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference; MoE counts
+    active params only (routed experts scaled by top_k/E)."""
+    n_total = 0
+    n_expert = 0
+    for s in builder.params.values():
+        n_total += s.size
+        if "/we_" in s.name or s.name.endswith(("we_gate", "we_up", "we_down")):
+            n_expert += s.size
+    active = n_total - n_expert
+    if cfg.n_experts:
+        active += n_expert * cfg.top_k / cfg.n_experts
+    tokens = batch * (seq if shape_kind in ("train", "prefill") else 1)
+    factor = 6.0 if shape_kind == "train" else 2.0
+    return factor * active * tokens

@@ -1,0 +1,270 @@
+"""Reusable IR-building blocks: norms, rotary embeddings, attention,
+MLPs, KV caches.  Every function builds nGraph IR (no jax imports).
+
+Conventions:
+  * activations flow in the builder's compute dtype (bf16 by default);
+  * norm math is f32 inside the compound ops;
+  * attention tensors use BHSD layout with logical sharding constraints
+    ("batch", "heads") the transformer maps onto mesh axes;
+  * ``weights`` dicts come from ``ModelBuilder.scan_blocks`` (storage
+    dtype — cast where compute dtype is wanted).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import ops
+from ..core.node import Value
+from .builder import ModelBuilder, ones_init, zeros_init, fanin_init
+
+Specs = Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]]
+
+BATCH_SPEC = ("batch", None, None)          # (B, S, D)
+BHSD_SPEC = ("batch", "heads", None, None)  # (B, H, S, D)
+
+
+def constrain(x: Value, spec) -> Value:
+    return ops.sharding_constraint(x, spec)
+
+
+# -- norms ---------------------------------------------------------------------
+def norm_specs(d: int, kind: str = "rms") -> Specs:
+    if kind == "rms":
+        return {"g": ((d,), (None,))}
+    return {"g": ((d,), (None,)), "b": ((d,), (None,))}
+
+
+def apply_norm(x: Value, w: Dict[str, Value], prefix: str, kind: str = "rms",
+               eps: float = 1e-6) -> Value:
+    if kind == "rms":
+        return ops.rms_norm(x, w[f"{prefix}g"], eps=eps)
+    return ops.layer_norm(x, w[f"{prefix}g"], w[f"{prefix}b"], eps=eps)
+
+
+def norm_inits(prefix: str, kind: str = "rms"):
+    out = {f"{prefix}g": ones_init()}
+    if kind == "layernorm":
+        out[f"{prefix}b"] = zeros_init()
+    return out
+
+
+# -- rotary ---------------------------------------------------------------------
+def rope_tables(b: ModelBuilder, seq: int, d_head: int, base: float = 10000.0,
+                offset: Optional[Value] = None) -> Tuple[Value, Value]:
+    """cos/sin tables (seq, d_head//2) in f32.  ``offset`` (scalar i32)
+    shifts positions for decode."""
+    half = d_head // 2
+    freq = ops.constant(
+        (base ** (-np.arange(half, dtype=np.float64) * 2.0 / d_head))
+        .astype(np.float32))  # (half,)
+    pos = ops.iota((seq,), 0, "i32")
+    if offset is not None:
+        pos = pos + ops.broadcast_to(offset, (seq,))
+    posf = ops.convert(pos, "f32")
+    ang = ops.reshape(posf, (seq, 1)) * ops.reshape(freq, (1, half))
+    return ops.cos(ang), ops.sin(ang)
+
+
+def apply_rope(x: Value, cos: Value, sin: Value) -> Value:
+    """x: (B, H, S, D); cos/sin: (S, D//2).  Rotate-half convention."""
+    B, H, S, D = x.shape
+    half = D // 2
+    x1 = ops.slice_(x, [0, 0, 0, 0], [B, H, S, half])
+    x2 = ops.slice_(x, [0, 0, 0, half], [B, H, S, D])
+    c = ops.reshape(cos, (1, 1, S, half))
+    s = ops.reshape(sin, (1, 1, S, half))
+    c = ops.convert(ops.broadcast_to(c, (B, H, S, half)), x.dtype)
+    s = ops.convert(ops.broadcast_to(s, (B, H, S, half)), x.dtype)
+    return ops.concat([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def split_heads(x: Value, n_heads: int) -> Value:
+    """(B, S, H*D) -> (B, H, S, D)."""
+    B, S, HD = x.shape
+    d = HD // n_heads
+    return ops.transpose(ops.reshape(x, (B, S, n_heads, d)), (0, 2, 1, 3))
+
+
+def merge_heads(x: Value) -> Value:
+    """(B, H, S, D) -> (B, S, H*D)."""
+    B, H, S, D = x.shape
+    return ops.reshape(ops.transpose(x, (0, 2, 1, 3)), (B, S, H * D))
+
+
+# -- attention --------------------------------------------------------------------
+def attn_specs(d_model: int, n_heads: int, n_kv: int, d_head: int,
+               qkv_bias: bool = False, kv_src_dim: Optional[int] = None) -> Specs:
+    src = kv_src_dim if kv_src_dim is not None else d_model
+    specs: Specs = {
+        "wq": ((d_model, n_heads * d_head), ("embed", "heads")),
+        "wk": ((src, n_kv * d_head), ("embed", "kv_heads")),
+        "wv": ((src, n_kv * d_head), ("embed", "kv_heads")),
+        "wo": ((n_heads * d_head, d_model), ("heads", "embed")),
+    }
+    if qkv_bias:
+        specs.update({
+            "bq": ((n_heads * d_head,), ("heads",)),
+            "bk": ((n_kv * d_head,), ("kv_heads",)),
+            "bv": ((n_kv * d_head,), ("kv_heads",)),
+        })
+    return specs
+
+
+def attn_inits(prefix: str, qkv_bias: bool = False):
+    out = {f"{prefix}{k}": fanin_init() for k in ("wq", "wk", "wv", "wo")}
+    if qkv_bias:
+        out.update({f"{prefix}b{k}": zeros_init() for k in ("q", "k", "v")})
+    return out
+
+
+def project_qkv(b: ModelBuilder, x: Value, w: Dict[str, Value], prefix: str,
+                n_heads: int, n_kv: int, qkv_bias: bool = False,
+                kv_x: Optional[Value] = None):
+    """Returns (q, k, v) in BHSD layout.  ``kv_x`` for cross attention."""
+    kvx = kv_x if kv_x is not None else x
+    q = ops.matmul(x, b.cast(w[f"{prefix}wq"]))
+    k = ops.matmul(kvx, b.cast(w[f"{prefix}wk"]))
+    v = ops.matmul(kvx, b.cast(w[f"{prefix}wv"]))
+    if qkv_bias:
+        q = q + b.cast(w[f"{prefix}bq"])
+        k = k + b.cast(w[f"{prefix}bk"])
+        v = v + b.cast(w[f"{prefix}bv"])
+    q = constrain(split_heads(q, n_heads), BHSD_SPEC)
+    k = constrain(split_heads(k, n_kv), BHSD_SPEC)
+    v = constrain(split_heads(v, n_kv), BHSD_SPEC)
+    return q, k, v
+
+
+def self_attention(
+    b: ModelBuilder,
+    x: Value,
+    w: Dict[str, Value],
+    *,
+    prefix: str = "attn_",
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope: Optional[Tuple[Value, Value]] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    qkv_bias: bool = False,
+    # decode-with-cache:
+    cache_k: Optional[Value] = None,   # (B, Hkv, Skv, D)
+    cache_v: Optional[Value] = None,
+    pos: Optional[Value] = None,       # scalar i32 absolute position
+    ring: bool = False,                # ring (rolling) cache for SWA decode
+    return_kv: bool = False,           # prefill: emit (k, v) for the cache
+) -> Tuple[Value, Tuple[Value, ...]]:
+    """Returns (out (B,S,Dm), extra) where extra = (new_k, new_v) when a
+    cache was threaded through (or when ``return_kv``)."""
+    q, k, v = project_qkv(b, x, w, prefix, n_heads, n_kv, qkv_bias)
+    if rope is not None:
+        q = apply_rope(q, *rope)
+        k = apply_rope(k, *rope)
+    extras: Tuple[Value, ...] = (k, v) if return_kv else ()
+    if cache_k is not None:
+        Skv = cache_k.shape[2]
+        zero = ops.constant(0, dtype="i32")
+        if ring:
+            win = ops.constant(Skv, dtype="i32")
+            slot = pos - (pos / win) * win  # pos % Skv (int divide == floor)
+        else:
+            slot = pos
+        cache_k = ops.dynamic_update_slice(cache_k, ops.convert(k, cache_k.dtype),
+                                           [zero, zero, slot, zero])
+        cache_v = ops.dynamic_update_slice(cache_v, ops.convert(v, cache_v.dtype),
+                                           [zero, zero, slot, zero])
+        extras = (cache_k, cache_v)
+        if ring:
+            # steady-state ring: every slot is within the window; RoPE was
+            # applied at write time so scores depend only on relative
+            # positions -> plain (non-causal) attention over the ring.
+            att = ops.attention(q, b.cast(cache_k), b.cast(cache_v),
+                                causal=False, scale=1.0 / math.sqrt(d_head))
+        else:
+            att = ops.attention(q, b.cast(cache_k), b.cast(cache_v),
+                                causal=causal, window=window,
+                                scale=1.0 / math.sqrt(d_head), q_offset=pos)
+    else:
+        att = ops.attention(q, k, v, causal=causal, window=window,
+                            scale=1.0 / math.sqrt(d_head))
+    out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
+    return constrain(out, BATCH_SPEC), extras
+
+
+def cross_attention(
+    b: ModelBuilder, x: Value, kv_src: Value, w: Dict[str, Value], *,
+    prefix: str, n_heads: int, n_kv: int, d_head: int,
+) -> Value:
+    q, k, v = project_qkv(b, x, w, prefix, n_heads, n_kv, kv_x=kv_src)
+    att = ops.attention(q, k, v, causal=False, scale=1.0 / math.sqrt(d_head))
+    out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
+    return constrain(out, BATCH_SPEC)
+
+
+# -- MLP -----------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int, kind: str = "swiglu") -> Specs:
+    if kind == "swiglu":
+        return {
+            "w_gate": ((d_model, d_ff), ("embed", "ffn")),
+            "w_up": ((d_model, d_ff), ("embed", "ffn")),
+            "w_down": ((d_ff, d_model), ("ffn", "embed")),
+        }
+    return {  # gelu
+        "w_in": ((d_model, d_ff), ("embed", "ffn")),
+        "b_in": ((d_ff,), ("ffn",)),
+        "w_out": ((d_ff, d_model), ("ffn", "embed")),
+        "b_out": ((d_model,), (None,)),
+    }
+
+
+def mlp_inits(prefix: str, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return {f"{prefix}{k}": fanin_init()
+                for k in ("w_gate", "w_up", "w_down")}
+    return {f"{prefix}w_in": fanin_init(), f"{prefix}b_in": zeros_init(),
+            f"{prefix}w_out": fanin_init(), f"{prefix}b_out": zeros_init()}
+
+
+def apply_mlp(b: ModelBuilder, x: Value, w: Dict[str, Value],
+              prefix: str = "mlp_", kind: str = "swiglu") -> Value:
+    if kind == "swiglu":
+        g = ops.silu(ops.matmul(x, b.cast(w[f"{prefix}w_gate"])))
+        u = ops.matmul(x, b.cast(w[f"{prefix}w_up"]))
+        h = constrain(g * u, ("batch", None, "ffn"))
+        return constrain(ops.matmul(h, b.cast(w[f"{prefix}w_down"])), BATCH_SPEC)
+    h = ops.gelu(ops.matmul(x, b.cast(w[f"{prefix}w_in"])) + b.cast(w[f"{prefix}b_in"]))
+    h = constrain(h, ("batch", None, "ffn"))
+    return constrain(ops.matmul(h, b.cast(w[f"{prefix}w_out"]))
+                     + b.cast(w[f"{prefix}b_out"]), BATCH_SPEC)
+
+
+# -- embedding / unembedding / loss ------------------------------------------------
+def embed_tokens(b: ModelBuilder, tokens: Value, vocab: int, d_model: int,
+                 name: str = "embed/table") -> Value:
+    table = b.raw_param(name, (vocab, d_model), ("vocab", "embed"))
+    h = ops.gather(b.cast(table), tokens, axis=0)
+    return constrain(h, BATCH_SPEC)
+
+
+def unembed(b: ModelBuilder, h: Value, vocab: int, d_model: int,
+            name: str = "unembed/w", tied_table: Optional[str] = None) -> Value:
+    if tied_table is not None:
+        w = ops.transpose(b.cast(b.params[tied_table].node.out()), (1, 0))
+    else:
+        w = b.cast(b.raw_param(name, (d_model, vocab), ("embed", "vocab")))
+    logits = ops.matmul(h, w)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def lm_loss(logits: Value, labels: Value) -> Value:
+    """Mean next-token cross entropy; logits (B,S,V) labels (B,S)."""
+    per_tok = ops.softmax_cross_entropy(ops.convert(logits, "f32"), labels)
+    return ops.reduce_mean(per_tok)
+
+
+def prefix_weights(specs: Specs, prefix: str) -> Specs:
+    return {f"{prefix}{k}": v for k, v in specs.items()}

@@ -1,0 +1,1061 @@
+"""Architecture assembly: every assigned arch as train / prefill / decode
+IR graphs.
+
+All ten architectures are *frontend programs* over the same IR (nGraph's
+O(frameworks + platforms) claim): each family function assembles blocks
+from ``components`` / ``moe`` / ``mla`` / ``recurrent`` / ``xlstm`` into a
+``Function`` via ``ModelBuilder.scan_blocks`` (stacked layer weights +
+the Scan op keep 80-layer graphs compact at 512-chip scale).
+
+Graph kinds:
+  * train   — (tokens, labels, *W) -> scalar loss (optimizer wrapped on
+              top by ``train_graph.make_train_step``)
+  * prefill — (tokens[, frames/images], *W) -> (last-token logits,
+              stacked KV/latent caches)
+  * decode  — (token, pos, *caches, *W) -> (logits, *updated caches);
+              sub-quadratic archs use ring buffers / recurrent state,
+              which is what makes the 500k cell O(1) per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core import ops
+from ..core.function import Function
+from ..core.node import Value
+from .builder import ModelBuilder, normal_init, ones_init
+from . import components as C
+from . import mla as MLA
+from . import moe as MOE
+from . import recurrent as RG
+from . import xlstm as XL
+
+CACHE_SPEC = (None, "batch", "kv_heads", "kv_seq", None)  # (L,B,H,S,D)
+
+
+@dataclasses.dataclass
+class ModelGraphs:
+    cfg: ModelConfig
+    kind: str
+    fn: Function
+    builder: ModelBuilder
+    aux: Dict[str, object]
+
+
+# =============================================================================
+# shared pieces
+# =============================================================================
+def _embed(b: ModelBuilder, cfg: ModelConfig, tokens: Value) -> Value:
+    return C.embed_tokens(b, tokens, cfg.vocab, cfg.d_model)
+
+
+def _final_logits(b: ModelBuilder, cfg: ModelConfig, h: Value,
+                  last_only: bool = False) -> Value:
+    B, S, D = h.shape
+    g = b.raw_param("final_norm/g", (D,), (None,), ones_init())
+    if cfg.norm == "layernorm":
+        from .builder import zeros_init
+        bb = b.raw_param("final_norm/b", (D,), (None,), zeros_init())
+        h = ops.layer_norm(h, g, bb, eps=cfg.norm_eps)
+    else:
+        h = ops.rms_norm(h, g, eps=cfg.norm_eps)
+    if last_only:
+        h = ops.slice_(h, [0, S - 1, 0], [B, S, D])
+    tied = "embed/table" if cfg.tie_embeddings else None
+    return C.unembed(b, h, cfg.vocab, cfg.d_model, tied_table=tied)
+
+
+def _loss_result(b: ModelBuilder, cfg: ModelConfig, h: Value, labels: Value,
+                 aux: Optional[Value] = None) -> Value:
+    logits = _final_logits(b, cfg, h)
+    loss = C.lm_loss(logits, labels)
+    if aux is not None:
+        loss = loss + ops.convert(aux, "f32")
+    return loss
+
+
+def _block_norm_specs(cfg: ModelConfig, prefix: str) -> C.Specs:
+    return C.prefix_weights(C.norm_specs(cfg.d_model, cfg.norm), prefix)
+
+
+def _cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Decode cache length: ring/window for sub-quadratic archs on the
+    long shape, full otherwise."""
+    if shape.kind == "long_decode":
+        if cfg.window is not None:
+            return cfg.window
+        if cfg.family == "rg_hybrid":
+            return cfg.local_window
+    return shape.seq_len
+
+
+# =============================================================================
+# dense family (qwen / granite / deepseek-7b / minicpm)
+# =============================================================================
+def _dense_layer_specs(cfg: ModelConfig) -> Tuple[C.Specs, Dict]:
+    dh = cfg.head_dim
+    specs: C.Specs = {}
+    specs.update(_block_norm_specs(cfg, "ln1_"))
+    specs.update(C.prefix_weights(
+        C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh,
+                     cfg.qkv_bias), "attn_"))
+    specs.update(_block_norm_specs(cfg, "ln2_"))
+    specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp),
+                                  "mlp_"))
+    inits = {}
+    inits.update(C.norm_inits("ln1_", cfg.norm))
+    inits.update(C.attn_inits("attn_", cfg.qkv_bias))
+    inits.update(C.norm_inits("ln2_", cfg.norm))
+    inits.update(C.mlp_inits("mlp_", cfg.mlp))
+    return specs, inits
+
+
+def _dense_block(b, cfg, h, w, rope, *, window=None, cache=None, pos=None,
+                 ring=False, return_kv=False):
+    dh = cfg.head_dim
+    xn = C.apply_norm(h, w, "ln1_", cfg.norm, cfg.norm_eps)
+    att, extras = C.self_attention(
+        b, xn, w, prefix="attn_", n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=dh, rope=rope, causal=True, window=window,
+        qkv_bias=cfg.qkv_bias,
+        cache_k=cache[0] if cache else None,
+        cache_v=cache[1] if cache else None,
+        pos=pos, ring=ring, return_kv=return_kv)
+    h = h + att
+    xn2 = C.apply_norm(h, w, "ln2_", cfg.norm, cfg.norm_eps)
+    h = h + C.apply_mlp(b, xn2, w, "mlp_", cfg.mlp)
+    return h, extras
+
+
+def build_dense(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    dh = cfg.head_dim
+    specs, inits = _dense_layer_specs(cfg)
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        h = _embed(b, cfg, tokens)
+        cos, sin = C.rope_tables(b, S, dh, cfg.rope_base)
+        want_kv = kind == "prefill"
+
+        def body(carries, w, consts):
+            hh, ex = _dense_block(b, cfg, carries[0], w,
+                                  (consts[0], consts[1]), window=cfg.window,
+                                  return_kv=want_kv)
+            return [hh], list(ex)
+
+        (h,), ys = b.scan_blocks(
+            "layers", cfg.n_layers, specs, body, [h], consts=[cos, sin],
+            n_ys=2 if want_kv else 0, weight_inits=inits)
+        if kind == "train":
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish(
+            [logits, ys[0], ys[1]], f"{cfg.name}_prefill"), b,
+            {"cache_shapes": [y.shape for y in ys]})
+
+    # decode
+    Skv = _cache_len(cfg, shape)
+    ring = shape.kind == "long_decode" and cfg.window is not None
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    ck = b.input("cache_k", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    cv = b.input("cache_v", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    h = _embed(b, cfg, token)
+    cos, sin = C.rope_tables(b, 1, dh, cfg.rope_base, offset=pos)
+
+    def body(carries, w, consts):
+        hh, ex = _dense_block(
+            b, cfg, carries[0], w, (consts[0], consts[1]),
+            window=cfg.window, cache=(w["cache_k"], w["cache_v"]),
+            pos=consts[2], ring=ring)
+        return [hh], list(ex)
+
+    (h,), ys = b.scan_blocks(
+        "layers", cfg.n_layers, specs, body, [h], consts=[cos, sin, pos],
+        xs_extra={"cache_k": ck, "cache_v": cv}, n_ys=2, weight_inits=inits)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish(
+        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# MoE family (mixtral)
+# =============================================================================
+def _moe_layer_specs(cfg: ModelConfig) -> Tuple[C.Specs, Dict]:
+    dh = cfg.head_dim
+    specs: C.Specs = {}
+    specs.update(_block_norm_specs(cfg, "ln1_"))
+    specs.update(C.prefix_weights(
+        C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh), "attn_"))
+    specs.update(_block_norm_specs(cfg, "ln2_"))
+    specs.update(C.prefix_weights(
+        MOE.moe_specs(cfg.d_model, cfg.n_experts, cfg.expert_d_ff,
+                      cfg.n_shared_experts), "moe_"))
+    inits = {}
+    inits.update(C.norm_inits("ln1_", cfg.norm))
+    inits.update(C.attn_inits("attn_"))
+    inits.update(C.norm_inits("ln2_", cfg.norm))
+    inits.update(MOE.moe_inits("moe_", cfg.n_shared_experts))
+    return specs, inits
+
+
+def _moe_block(b, cfg, h, aux, w, rope, *, cache=None, pos=None, ring=False,
+               return_kv=False):
+    dh = cfg.head_dim
+    xn = C.apply_norm(h, w, "ln1_", cfg.norm, cfg.norm_eps)
+    att, extras = C.self_attention(
+        b, xn, w, prefix="attn_", n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=dh, rope=rope, causal=True, window=cfg.window,
+        cache_k=cache[0] if cache else None,
+        cache_v=cache[1] if cache else None, pos=pos, ring=ring,
+        return_kv=return_kv)
+    h = h + att
+    xn2 = C.apply_norm(h, w, "ln2_", cfg.norm, cfg.norm_eps)
+    mo, a = MOE.apply_moe(b, xn2, w, prefix="moe_", n_experts=cfg.n_experts,
+                          top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor)
+    if cfg.n_shared_experts:
+        mo = mo + MOE.apply_shared_expert(b, xn2, w, "moe_")
+    h = h + mo
+    aux = aux + a
+    return h, aux, extras
+
+
+def build_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    dh = cfg.head_dim
+    specs, inits = _moe_layer_specs(cfg)
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        h = _embed(b, cfg, tokens)
+        aux0 = ops.constant(0.0, dtype="f32")
+        cos, sin = C.rope_tables(b, S, dh, cfg.rope_base)
+        want_kv = kind == "prefill"
+
+        def body(carries, w, consts):
+            hh, aux, ex = _moe_block(b, cfg, carries[0], carries[1], w,
+                                     (consts[0], consts[1]),
+                                     return_kv=want_kv)
+            return [hh, aux], list(ex)
+
+        (h, aux), ys = b.scan_blocks(
+            "layers", cfg.n_layers, specs, body, [h, aux0],
+            consts=[cos, sin], n_ys=2 if want_kv else 0, weight_inits=inits)
+        if kind == "train":
+            aux = aux * ops.constant(cfg.router_aux_weight / cfg.n_layers,
+                                     dtype="f32")
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels, aux)],
+                f"{cfg.name}_train"), b, {})
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish(
+            [logits, ys[0], ys[1]], f"{cfg.name}_prefill"), b, {})
+
+    Skv = _cache_len(cfg, shape)
+    ring = shape.kind == "long_decode" and cfg.window is not None
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    ck = b.input("cache_k", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    cv = b.input("cache_v", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    h = _embed(b, cfg, token)
+    aux0 = ops.constant(0.0, dtype="f32")
+    cos, sin = C.rope_tables(b, 1, dh, cfg.rope_base, offset=pos)
+
+    def body(carries, w, consts):
+        hh, aux, ex = _moe_block(b, cfg, carries[0], carries[1], w,
+                                 (consts[0], consts[1]),
+                                 cache=(w["cache_k"], w["cache_v"]),
+                                 pos=consts[2], ring=ring)
+        return [hh, aux], list(ex)
+
+    (h, _), ys = b.scan_blocks(
+        "layers", cfg.n_layers, specs, body, [h, aux0],
+        consts=[cos, sin, pos], xs_extra={"cache_k": ck, "cache_v": cv},
+        n_ys=2, weight_inits=inits)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish(
+        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# MLA + MoE family (deepseek-v3) — dense first_k layers, then MoE; MTP head
+# =============================================================================
+def _mla_attn_specs(cfg: ModelConfig) -> Tuple[C.Specs, Dict]:
+    specs = C.prefix_weights(
+        MLA.mla_specs(cfg.d_model, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+                      cfg.d_nope, cfg.d_rope, cfg.d_v), "attn_")
+    return specs, MLA.mla_inits("attn_")
+
+
+def _v3_dense_specs(cfg) -> Tuple[C.Specs, Dict]:
+    sa, ia = _mla_attn_specs(cfg)
+    specs: C.Specs = {}
+    specs.update(_block_norm_specs(cfg, "ln1_"))
+    specs.update(sa)
+    specs.update(_block_norm_specs(cfg, "ln2_"))
+    specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff), "mlp_"))
+    inits = {**C.norm_inits("ln1_"), **ia, **C.norm_inits("ln2_"),
+             **C.mlp_inits("mlp_")}
+    return specs, inits
+
+
+def _v3_moe_specs(cfg) -> Tuple[C.Specs, Dict]:
+    sa, ia = _mla_attn_specs(cfg)
+    specs: C.Specs = {}
+    specs.update(_block_norm_specs(cfg, "ln1_"))
+    specs.update(sa)
+    specs.update(_block_norm_specs(cfg, "ln2_"))
+    specs.update(C.prefix_weights(
+        MOE.moe_specs(cfg.d_model, cfg.n_experts, cfg.expert_d_ff,
+                      cfg.n_shared_experts), "moe_"))
+    inits = {**C.norm_inits("ln1_"), **ia, **C.norm_inits("ln2_"),
+             **MOE.moe_inits("moe_", cfg.n_shared_experts)}
+    return specs, inits
+
+
+def _v3_block(b, cfg, h, aux, w, rope, *, moe: bool, cache=None, pos=None):
+    xn = C.apply_norm(h, w, "ln1_", cfg.norm, cfg.norm_eps)
+    att, extras = MLA.apply_mla(
+        b, xn, w, prefix="attn_", n_heads=cfg.n_heads, q_lora=cfg.q_lora,
+        kv_lora=cfg.kv_lora, d_nope=cfg.d_nope, d_rope=cfg.d_rope,
+        d_v=cfg.d_v, rope=rope,
+        cache_ckv=cache[0] if cache else None,
+        cache_kr=cache[1] if cache else None, pos=pos)
+    h = h + att
+    xn2 = C.apply_norm(h, w, "ln2_", cfg.norm, cfg.norm_eps)
+    if moe:
+        mo, a = MOE.apply_moe(b, xn2, w, prefix="moe_",
+                              n_experts=cfg.n_experts, top_k=cfg.top_k,
+                              capacity_factor=cfg.capacity_factor)
+        if cfg.n_shared_experts:
+            mo = mo + MOE.apply_shared_expert(b, xn2, w, "moe_")
+        h = h + mo
+        aux = aux + a
+    else:
+        h = h + C.apply_mlp(b, xn2, w, "mlp_")
+    return h, aux, extras
+
+
+def build_mla_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    nd, nm = cfg.first_dense, cfg.n_layers - cfg.first_dense
+    sd, idn = _v3_dense_specs(cfg)
+    sm, imo = _v3_moe_specs(cfg)
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        h = _embed(b, cfg, tokens)
+        aux = ops.constant(0.0, dtype="f32")
+        cos, sin = C.rope_tables(b, S, cfg.d_rope, cfg.rope_base)
+        want_kv = kind == "prefill"
+
+        def dense_body(carries, w, consts):
+            hh, a2, ex = _v3_block(b, cfg, carries[0], carries[1], w,
+                                   (consts[0], consts[1]), moe=False)
+            return [hh, a2], list(ex) if want_kv else []
+
+        def moe_body(carries, w, consts):
+            hh, a2, ex = _v3_block(b, cfg, carries[0], carries[1], w,
+                                   (consts[0], consts[1]), moe=True)
+            return [hh, a2], list(ex) if want_kv else []
+
+        (h, aux), ys_d = b.scan_blocks(
+            "dense", nd, sd, dense_body, [h, aux], consts=[cos, sin],
+            n_ys=2 if want_kv else 0, weight_inits=idn)
+        (h, aux), ys_m = b.scan_blocks(
+            "moe", nm, sm, moe_body, [h, aux], consts=[cos, sin],
+            n_ys=2 if want_kv else 0, weight_inits=imo)
+
+        if kind == "prefill":
+            logits = _final_logits(b, cfg, h, last_only=True)
+            return ModelGraphs(cfg, kind, b.finish(
+                [logits] + list(ys_d) + list(ys_m),
+                f"{cfg.name}_prefill"), b, {})
+
+        aux = aux * ops.constant(cfg.router_aux_weight / max(nm, 1), dtype="f32")
+        loss = _loss_result(b, cfg, h, labels, aux)
+        if cfg.mtp:
+            loss = loss + _mtp_loss(b, cfg, h, tokens, labels)
+        return ModelGraphs(cfg, kind, b.finish([loss], f"{cfg.name}_train"),
+                           b, {})
+
+    # decode: latent caches per layer (split dense/moe stacks)
+    Skv = _cache_len(cfg, shape)
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    cd_kv = b.input("dense_ckv", (nd, batch, Skv, cfg.kv_lora),
+                    dtype=cfg.compute_dtype, spec=(None, "batch", "kv_seq", None))
+    cd_kr = b.input("dense_kr", (nd, batch, Skv, cfg.d_rope),
+                    dtype=cfg.compute_dtype, spec=(None, "batch", "kv_seq", None))
+    cm_kv = b.input("moe_ckv", (nm, batch, Skv, cfg.kv_lora),
+                    dtype=cfg.compute_dtype, spec=(None, "batch", "kv_seq", None))
+    cm_kr = b.input("moe_kr", (nm, batch, Skv, cfg.d_rope),
+                    dtype=cfg.compute_dtype, spec=(None, "batch", "kv_seq", None))
+    h = _embed(b, cfg, token)
+    aux = ops.constant(0.0, dtype="f32")
+    cos, sin = C.rope_tables(b, 1, cfg.d_rope, cfg.rope_base, offset=pos)
+
+    def dense_body(carries, w, consts):
+        hh, a2, ex = _v3_block(b, cfg, carries[0], carries[1], w,
+                               (consts[0], consts[1]), moe=False,
+                               cache=(w["ckv"], w["kr"]), pos=consts[2])
+        return [hh, a2], list(ex)
+
+    def moe_body(carries, w, consts):
+        hh, a2, ex = _v3_block(b, cfg, carries[0], carries[1], w,
+                               (consts[0], consts[1]), moe=True,
+                               cache=(w["ckv"], w["kr"]), pos=consts[2])
+        return [hh, a2], list(ex)
+
+    (h, aux), ys_d = b.scan_blocks(
+        "dense", nd, sd, dense_body, [h, aux], consts=[cos, sin, pos],
+        xs_extra={"ckv": cd_kv, "kr": cd_kr}, n_ys=2, weight_inits=idn)
+    (h, _), ys_m = b.scan_blocks(
+        "moe", nm, sm, moe_body, [h, aux], consts=[cos, sin, pos],
+        xs_extra={"ckv": cm_kv, "kr": cm_kr}, n_ys=2, weight_inits=imo)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish(
+        [logits] + list(ys_d) + list(ys_m), f"{cfg.name}_decode"), b, {})
+
+
+def _mtp_loss(b: ModelBuilder, cfg: ModelConfig, h: Value, tokens: Value,
+              labels: Value) -> Value:
+    """One MTP depth: predict token t+2 from h_t and emb(token t+1)."""
+    B, S, D = h.shape
+    h1 = ops.slice_(h, [0, 0, 0], [B, S - 1, D])
+    tok_next = ops.slice_(tokens, [0, 1], [B, S])
+    emb = ops.gather(b.cast(b.params["embed/table"].node.out()), tok_next,
+                     axis=0)
+    g1 = b.raw_param("mtp/norm_h/g", (D,), (None,), ones_init())
+    g2 = b.raw_param("mtp/norm_e/g", (D,), (None,), ones_init())
+    cat = ops.concat([ops.rms_norm(h1, g1), ops.rms_norm(emb, g2)], axis=-1)
+    wp = b.param("mtp/proj", (2 * D, D), ("embed", "embed"))
+    hm = ops.matmul(cat, wp)
+    # one transformer block on hm
+    specs, inits = _v3_dense_specs(cfg)
+    cos, sin = C.rope_tables(b, S - 1, cfg.d_rope, cfg.rope_base)
+
+    def body(carries, w, consts):
+        hh, _, _ = _v3_block(b, cfg, carries[0],
+                             ops.constant(0.0, dtype="f32"), w,
+                             (consts[0], consts[1]), moe=False)
+        return [hh], []
+
+    (hm,), _ = b.scan_blocks("mtp_block", 1, specs, body, [hm],
+                             consts=[cos, sin], weight_inits=inits)
+    gf = b.raw_param("mtp/final_norm/g", (D,), (None,), ones_init())
+    logits = C.unembed(b, ops.rms_norm(hm, gf), cfg.vocab, cfg.d_model,
+                       tied_table="embed/table")
+    lbl2 = ops.slice_(labels, [0, 1], [B, S])
+    return C.lm_loss(logits, lbl2) * ops.constant(cfg.mtp_weight, dtype="f32")
+
+
+# =============================================================================
+# RecurrentGemma hybrid
+# =============================================================================
+def _rg_group_specs(cfg: ModelConfig, pattern) -> Tuple[C.Specs, Dict]:
+    dh = cfg.head_dim
+    specs: C.Specs = {}
+    inits: Dict = {}
+    for i, kindp in enumerate(pattern):
+        p = f"b{i}_"
+        specs.update(_block_norm_specs(cfg, f"{p}ln1_"))
+        inits.update(C.norm_inits(f"{p}ln1_", cfg.norm))
+        if kindp == "rec":
+            specs.update(C.prefix_weights(
+                RG.rg_specs(cfg.d_model, cfg.lru_width, cfg.conv_width),
+                f"{p}rec_"))
+            inits.update(RG.rg_inits(f"{p}rec_"))
+        else:
+            specs.update(C.prefix_weights(
+                C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh),
+                f"{p}attn_"))
+            inits.update(C.attn_inits(f"{p}attn_"))
+        specs.update(_block_norm_specs(cfg, f"{p}ln2_"))
+        specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff),
+                                      f"{p}mlp_"))
+        inits.update(C.norm_inits(f"{p}ln2_", cfg.norm))
+        inits.update(C.mlp_inits(f"{p}mlp_"))
+    return specs, inits
+
+
+def _rg_group(b, cfg, h, w, pattern, rope, *, decode=False, caches=None,
+              pos=None, return_kv=False):
+    """caches: dict with per-block entries (decode)."""
+    dh = cfg.head_dim
+    new_states: List[Value] = []
+    kv_out: List[Value] = []
+    for i, kindp in enumerate(pattern):
+        p = f"b{i}_"
+        xn = C.apply_norm(h, w, f"{p}ln1_", cfg.norm, cfg.norm_eps)
+        if kindp == "rec":
+            out, ex = RG.apply_rg_block(
+                b, xn, w, prefix=f"{p}rec_",
+                conv_tail=w.get(f"{p}tail") if decode else None,
+                h_state=w.get(f"{p}h") if decode else None, decode=decode)
+            if decode:
+                new_states.extend(ex)
+        else:
+            out, ex = C.self_attention(
+                b, xn, w, prefix=f"{p}attn_", n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=dh, rope=rope, causal=True,
+                window=cfg.local_window,
+                cache_k=w.get(f"{p}ck") if decode else None,
+                cache_v=w.get(f"{p}cv") if decode else None,
+                pos=pos, ring=decode and caches == "ring",
+                return_kv=return_kv)
+            if decode or return_kv:
+                kv_out.extend(ex)
+        h = h + out
+        xn2 = C.apply_norm(h, w, f"{p}ln2_", cfg.norm, cfg.norm_eps)
+        h = h + C.apply_mlp(b, xn2, w, f"{p}mlp_")
+    return h, new_states, kv_out
+
+
+def build_rg(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    dh = cfg.head_dim
+    pat = cfg.pattern
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    tail_pat = tuple(pat[:rem]) if rem else ()
+    sg, ig = _rg_group_specs(cfg, pat)
+    st, it = _rg_group_specs(cfg, tail_pat) if tail_pat else ({}, {})
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        h = _embed(b, cfg, tokens)
+        cos, sin = C.rope_tables(b, S, dh, cfg.rope_base)
+        want_kv = kind == "prefill"
+
+        def mk_body(pattern):
+            def body(carries, w, consts):
+                hh, _, kvs = _rg_group(b, cfg, carries[0], w, pattern,
+                                       (consts[0], consts[1]),
+                                       return_kv=want_kv)
+                return [hh], kvs
+            return body
+
+        n_attn = sum(1 for k in pat if k == "attn")
+        (h,), ys = b.scan_blocks("groups", n_groups, sg, mk_body(pat), [h],
+                                 consts=[cos, sin],
+                                 n_ys=2 * n_attn if want_kv else 0,
+                                 weight_inits=ig)
+        if tail_pat:
+            nta = sum(1 for k in tail_pat if k == "attn")
+            (h,), ys2 = b.scan_blocks("tail", 1, st, mk_body(tail_pat), [h],
+                                      consts=[cos, sin],
+                                      n_ys=2 * nta if want_kv else 0,
+                                      weight_inits=it)
+            ys = list(ys) + list(ys2)
+        if kind == "train":
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                               f"{cfg.name}_prefill"), b, {})
+
+    # decode: recurrent state + windowed attention cache
+    Skv = _cache_len(cfg, shape)
+    ring = shape.kind == "long_decode"
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    cw1 = cfg.conv_width - 1
+    lw = cfg.lru_width
+
+    def declare_states(tag, pattern, n):
+        xs = {}
+        for i, kindp in enumerate(pattern):
+            p = f"b{i}_"
+            if kindp == "rec":
+                xs[f"{p}tail"] = b.input(
+                    f"{tag}_{i}_tail", (n, batch, cw1, lw),
+                    dtype=cfg.compute_dtype, spec=(None, "batch", None, None))
+                xs[f"{p}h"] = b.input(
+                    f"{tag}_{i}_h", (n, batch, 1, lw), dtype="f32",
+                    spec=(None, "batch", None, None))
+            else:
+                xs[f"{p}ck"] = b.input(
+                    f"{tag}_{i}_ck", (n, batch, cfg.n_kv_heads, Skv, dh),
+                    dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+                xs[f"{p}cv"] = b.input(
+                    f"{tag}_{i}_cv", (n, batch, cfg.n_kv_heads, Skv, dh),
+                    dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+        return xs
+
+    xs_main = declare_states("g", pat, n_groups)
+    xs_tail = declare_states("t", tail_pat, 1) if tail_pat else {}
+    h = _embed(b, cfg, token)
+    cos, sin = C.rope_tables(b, 1, dh, cfg.rope_base, offset=pos)
+
+    def mk_body(pattern):
+        def body(carries, w, consts):
+            hh, states, kvs = _rg_group(
+                b, cfg, carries[0], w, pattern, (consts[0], consts[1]),
+                decode=True, caches="ring" if ring else None, pos=consts[2])
+            return [hh], states + kvs
+        return body
+
+    def n_states(pattern):
+        return sum(2 for k in pattern)  # rec: (tail,h); attn: (ck,cv)
+
+    (h,), ys1 = b.scan_blocks("groups", n_groups, sg, mk_body(pat), [h],
+                              consts=[cos, sin, pos], xs_extra=xs_main,
+                              n_ys=n_states(pat), weight_inits=ig)
+    ys = list(ys1)
+    if tail_pat:
+        (h,), ys2 = b.scan_blocks("tail", 1, st, mk_body(tail_pat), [h],
+                                  consts=[cos, sin, pos], xs_extra=xs_tail,
+                                  n_ys=n_states(tail_pat), weight_inits=it)
+        ys += list(ys2)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish([logits] + ys,
+                                           f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# xLSTM
+# =============================================================================
+def build_xlstm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    D = cfg.d_model
+    H = cfg.n_heads
+    proj = cfg.mlstm_proj
+    dp = proj * D
+    dm = dp // H  # mLSTM head dim
+    ffn = max(128, int(D * 4 / 3) // 128 * 128)
+    n_groups = cfg.n_layers // 2  # alternating (mLSTM, sLSTM) pairs
+
+    specs: C.Specs = {}
+    inits: Dict = {}
+    specs.update(_block_norm_specs(cfg, "m_ln_"))
+    inits.update(C.norm_inits("m_ln_", cfg.norm))
+    specs.update(C.prefix_weights(XL.mlstm_specs(D, H, proj), "m_"))
+    inits.update(XL.mlstm_inits("m_"))
+    specs.update(_block_norm_specs(cfg, "s_ln_"))
+    inits.update(C.norm_inits("s_ln_", cfg.norm))
+    specs.update(C.prefix_weights(XL.slstm_specs(D, H, ffn), "s_"))
+    inits.update(XL.slstm_inits("s_"))
+
+    def body_train(carries, w, consts):
+        h = carries[0]
+        xn = C.apply_norm(h, w, "m_ln_", cfg.norm, cfg.norm_eps)
+        out, _ = XL.apply_mlstm_block(b, xn, w, prefix="m_", n_heads=H,
+                                      proj=proj)
+        h = h + out
+        xn = C.apply_norm(h, w, "s_ln_", cfg.norm, cfg.norm_eps)
+        out, _ = XL.apply_slstm_block(b, xn, w, prefix="s_", n_heads=H,
+                                      d_ff=ffn)
+        h = h + out
+        return [h], []
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        h = _embed(b, cfg, tokens)
+        (h,), _ = b.scan_blocks("groups", n_groups, specs, body_train, [h],
+                                weight_inits=inits)
+        if kind == "train":
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
+        # prefill: recompute-from-scratch caches are the recurrent states;
+        # emitting them requires the decode-form recurrence — for the
+        # prefill cell we report last-token logits only (states are cheap
+        # to rebuild chunkwise; see DESIGN.md).
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish([logits],
+                                               f"{cfg.name}_prefill"), b, {})
+
+    # decode: pure recurrent state, no KV cache at any context length
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    xs_extra = {
+        "mC": b.input("m_C", (n_groups, batch, H, dm, dm), dtype="f32",
+                      spec=(None, "batch", "heads", None, None)),
+        "mn": b.input("m_n", (n_groups, batch, H, dm), dtype="f32",
+                      spec=(None, "batch", "heads", None)),
+        "mm": b.input("m_m", (n_groups, batch, H), dtype="f32",
+                      spec=(None, "batch", None)),
+        "sh": b.input("s_h", (n_groups, batch, D), dtype="f32",
+                      spec=(None, "batch", None)),
+        "sc": b.input("s_c", (n_groups, batch, D), dtype="f32",
+                      spec=(None, "batch", None)),
+        "sn": b.input("s_n", (n_groups, batch, D), dtype="f32",
+                      spec=(None, "batch", None)),
+        "sm": b.input("s_m", (n_groups, batch, D), dtype="f32",
+                      spec=(None, "batch", None)),
+    }
+    h = _embed(b, cfg, token)
+
+    def body(carries, w, consts):
+        hh = carries[0]
+        xn = C.apply_norm(hh, w, "m_ln_", cfg.norm, cfg.norm_eps)
+        out, mst = XL.apply_mlstm_block(b, xn, w, prefix="m_", n_heads=H,
+                                        proj=proj,
+                                        state=(w["mC"], w["mn"], w["mm"]))
+        hh = hh + out
+        xn = C.apply_norm(hh, w, "s_ln_", cfg.norm, cfg.norm_eps)
+        out, sst = XL.apply_slstm_block(b, xn, w, prefix="s_", n_heads=H,
+                                        d_ff=ffn,
+                                        state=(w["sh"], w["sc"], w["sn"],
+                                               w["sm"]))
+        hh = hh + out
+        return [hh], list(mst) + list(sst)
+
+    (h,), ys = b.scan_blocks("groups", n_groups, specs, body, [h],
+                             xs_extra=xs_extra, n_ys=7, weight_inits=inits)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                           f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# encoder-decoder (whisper) — conv frontend stubbed as frame embeddings
+# =============================================================================
+def _sinusoid(b: ModelBuilder, S: int, D: int,
+              offset: Optional[Value] = None) -> Value:
+    import numpy as np
+    half = D // 2
+    freq = ops.constant(
+        np.exp(-np.arange(half, dtype=np.float64) * (math.log(10000.0) / max(half - 1, 1)))
+        .astype(np.float32))
+    pos = ops.iota((S,), 0, "i32")
+    if offset is not None:
+        pos = pos + ops.broadcast_to(offset, (S,))
+    ang = ops.reshape(ops.convert(pos, "f32"), (S, 1)) * ops.reshape(freq, (1, half))
+    return ops.concat([ops.sin(ang), ops.cos(ang)], axis=-1)  # (S, D)
+
+
+def _whisper_dec_specs(cfg) -> Tuple[C.Specs, Dict]:
+    dh = cfg.head_dim
+    specs: C.Specs = {}
+    specs.update(_block_norm_specs(cfg, "ln1_"))
+    specs.update(C.prefix_weights(
+        C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh), "self_"))
+    specs.update(_block_norm_specs(cfg, "lnx_"))
+    specs.update(C.prefix_weights(
+        C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh), "cross_"))
+    specs.update(_block_norm_specs(cfg, "ln2_"))
+    specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp),
+                                  "mlp_"))
+    inits = {**C.norm_inits("ln1_", cfg.norm), **C.attn_inits("self_"),
+             **C.norm_inits("lnx_", cfg.norm), **C.attn_inits("cross_"),
+             **C.norm_inits("ln2_", cfg.norm), **C.mlp_inits("mlp_", cfg.mlp)}
+    return specs, inits
+
+
+def build_encdec(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    dh = cfg.head_dim
+    D = cfg.d_model
+
+    def encoder(frames: Value) -> Value:
+        B, Se, _ = frames.shape
+        pe = ops.convert(_sinusoid(b, Se, D), cfg.compute_dtype)
+        h = frames + ops.broadcast_to(ops.reshape(pe, (1, Se, D)), frames.shape)
+        specs: C.Specs = {}
+        specs.update(_block_norm_specs(cfg, "ln1_"))
+        specs.update(C.prefix_weights(
+            C.attn_specs(D, cfg.n_heads, cfg.n_kv_heads, dh), "attn_"))
+        specs.update(_block_norm_specs(cfg, "ln2_"))
+        specs.update(C.prefix_weights(C.mlp_specs(D, cfg.d_ff, cfg.mlp),
+                                      "mlp_"))
+        inits = {**C.norm_inits("ln1_", cfg.norm), **C.attn_inits("attn_"),
+                 **C.norm_inits("ln2_", cfg.norm),
+                 **C.mlp_inits("mlp_", cfg.mlp)}
+
+        def body(carries, w, consts):
+            hh = carries[0]
+            xn = C.apply_norm(hh, w, "ln1_", cfg.norm, cfg.norm_eps)
+            att, _ = C.self_attention(b, xn, w, prefix="attn_",
+                                      n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads, d_head=dh,
+                                      causal=False)
+            hh = hh + att
+            xn2 = C.apply_norm(hh, w, "ln2_", cfg.norm, cfg.norm_eps)
+            hh = hh + C.apply_mlp(b, xn2, w, "mlp_", cfg.mlp)
+            return [hh], []
+
+        (h,), _ = b.scan_blocks("enc", cfg.n_enc_layers, specs, body, [h],
+                                weight_inits=inits)
+        ge = b.raw_param("enc_norm/g", (D,), (None,), ones_init())
+        be = b.raw_param("enc_norm/b", (D,), (None,))
+        return ops.layer_norm(h, ge, be, eps=cfg.norm_eps)
+
+    sd, idd = _whisper_dec_specs(cfg)
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        frames = b.input("frames", (batch, cfg.enc_seq, D),
+                         dtype=cfg.compute_dtype, spec=("batch", None, None))
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        enc = encoder(frames)
+        pe = ops.convert(_sinusoid(b, S, D), cfg.compute_dtype)
+        h = _embed(b, cfg, tokens) + ops.broadcast_to(
+            ops.reshape(pe, (1, S, D)), (batch, S, D))
+        want_kv = kind == "prefill"
+
+        def body(carries, w, consts):
+            hh = carries[0]
+            encv = consts[0]
+            xn = C.apply_norm(hh, w, "ln1_", cfg.norm, cfg.norm_eps)
+            att, ex = C.self_attention(b, xn, w, prefix="self_",
+                                       n_heads=cfg.n_heads,
+                                       n_kv=cfg.n_kv_heads, d_head=dh,
+                                       causal=True, return_kv=want_kv)
+            hh = hh + att
+            xn = C.apply_norm(hh, w, "lnx_", cfg.norm, cfg.norm_eps)
+            hh = hh + C.cross_attention(b, xn, encv, w, prefix="cross_",
+                                        n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_kv_heads, d_head=dh)
+            xn = C.apply_norm(hh, w, "ln2_", cfg.norm, cfg.norm_eps)
+            hh = hh + C.apply_mlp(b, xn, w, "mlp_", cfg.mlp)
+            return [hh], list(ex)
+
+        (h,), ys = b.scan_blocks("dec", cfg.n_layers, sd, body, [h],
+                                 consts=[enc], n_ys=2 if want_kv else 0,
+                                 weight_inits=idd)
+        if kind == "train":
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                               f"{cfg.name}_prefill"), b, {})
+
+    # decode: self cache + precomputed per-layer cross k/v caches
+    Skv = _cache_len(cfg, shape)
+    L = cfg.n_layers
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    ck = b.input("cache_k", (L, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    cv = b.input("cache_v", (L, batch, cfg.n_kv_heads, Skv, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    xk = b.input("cross_k", (L, batch, cfg.n_kv_heads, cfg.enc_seq, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    xv = b.input("cross_v", (L, batch, cfg.n_kv_heads, cfg.enc_seq, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    pe = ops.convert(_sinusoid(b, 1, D, offset=pos), cfg.compute_dtype)
+    h = _embed(b, cfg, token) + ops.broadcast_to(
+        ops.reshape(pe, (1, 1, D)), (batch, 1, D))
+
+    def body(carries, w, consts):
+        hh = carries[0]
+        xn = C.apply_norm(hh, w, "ln1_", cfg.norm, cfg.norm_eps)
+        att, ex = C.self_attention(
+            b, xn, w, prefix="self_", n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=dh, causal=True,
+            cache_k=w["sck"], cache_v=w["scv"], pos=consts[0])
+        hh = hh + att
+        xn = C.apply_norm(hh, w, "lnx_", cfg.norm, cfg.norm_eps)
+        # cross attention against the cached encoder projections
+        q = ops.matmul(xn, b.cast(w["cross_wq"]))
+        q = C.split_heads(q, cfg.n_heads)
+        catt = ops.attention(q, b.cast(w["xck"]), b.cast(w["xcv"]),
+                             causal=False, scale=1.0 / math.sqrt(dh))
+        hh = hh + ops.matmul(C.merge_heads(catt), b.cast(w["cross_wo"]))
+        xn = C.apply_norm(hh, w, "ln2_", cfg.norm, cfg.norm_eps)
+        hh = hh + C.apply_mlp(b, xn, w, "mlp_", cfg.mlp)
+        return [hh], list(ex)
+
+    (h,), ys = b.scan_blocks(
+        "dec", L, sd, body, [h], consts=[pos],
+        xs_extra={"sck": ck, "scv": cv, "xck": xk, "xcv": xv}, n_ys=2,
+        weight_inits=idd)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                           f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# VLM (llama-3.2-vision): self-attn stack + gated cross-attn every Nth
+# =============================================================================
+def _vlm_group_specs(cfg) -> Tuple[C.Specs, Dict]:
+    dh = cfg.head_dim
+    specs: C.Specs = {}
+    inits: Dict = {}
+    # gated cross block at group start
+    specs.update(_block_norm_specs(cfg, "xln_"))
+    specs.update(C.prefix_weights(
+        C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh), "x_"))
+    specs["x_gate_attn"] = ((), ())
+    specs["x_gate_ffn"] = ((), ())
+    specs.update(_block_norm_specs(cfg, "xln2_"))
+    specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff), "xmlp_"))
+    inits.update(C.norm_inits("xln_"))
+    inits.update(C.attn_inits("x_"))
+    inits.update(C.norm_inits("xln2_"))
+    inits.update(C.mlp_inits("xmlp_"))
+    from .builder import zeros_init
+    inits["x_gate_attn"] = zeros_init()
+    inits["x_gate_ffn"] = zeros_init()
+    for i in range(cfg.cross_every):
+        p = f"s{i}_"
+        specs.update(_block_norm_specs(cfg, f"{p}ln1_"))
+        specs.update(C.prefix_weights(
+            C.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dh),
+            f"{p}attn_"))
+        specs.update(_block_norm_specs(cfg, f"{p}ln2_"))
+        specs.update(C.prefix_weights(C.mlp_specs(cfg.d_model, cfg.d_ff),
+                                      f"{p}mlp_"))
+        inits.update(C.norm_inits(f"{p}ln1_"))
+        inits.update(C.attn_inits(f"{p}attn_"))
+        inits.update(C.norm_inits(f"{p}ln2_"))
+        inits.update(C.mlp_inits(f"{p}mlp_"))
+    return specs, inits
+
+
+def _vlm_group(b, cfg, h, w, rope, vis, *, decode=False, pos=None,
+               return_kv=False):
+    dh = cfg.head_dim
+    # gated cross-attention (vis: (B, T_v, D) projected vision tokens,
+    # or cached (xk, xv) in decode)
+    xn = C.apply_norm(h, w, "xln_", cfg.norm, cfg.norm_eps)
+    if decode:
+        q = C.split_heads(ops.matmul(xn, b.cast(w["x_wq"])), cfg.n_heads)
+        catt = ops.attention(q, b.cast(w["vxk"]), b.cast(w["vxv"]),
+                             causal=False, scale=1.0 / math.sqrt(dh))
+        cat_o = ops.matmul(C.merge_heads(catt), b.cast(w["x_wo"]))
+    else:
+        cat_o = C.cross_attention(b, xn, vis, w, prefix="x_",
+                                  n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                  d_head=dh)
+    h = h + ops.tanh(ops.convert(w["x_gate_attn"], h.dtype)) * cat_o
+    xn = C.apply_norm(h, w, "xln2_", cfg.norm, cfg.norm_eps)
+    h = h + ops.tanh(ops.convert(w["x_gate_ffn"], h.dtype)) * \
+        C.apply_mlp(b, xn, w, "xmlp_")
+    kvs: List[Value] = []
+    for i in range(cfg.cross_every):
+        p = f"s{i}_"
+        xn = C.apply_norm(h, w, f"{p}ln1_", cfg.norm, cfg.norm_eps)
+        att, ex = C.self_attention(
+            b, xn, w, prefix=f"{p}attn_", n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=dh, rope=rope, causal=True,
+            cache_k=w.get(f"{p}ck") if decode else None,
+            cache_v=w.get(f"{p}cv") if decode else None,
+            pos=pos, return_kv=return_kv)
+        kvs.extend(ex)
+        h = h + att
+        xn = C.apply_norm(h, w, f"{p}ln2_", cfg.norm, cfg.norm_eps)
+        h = h + C.apply_mlp(b, xn, w, f"{p}mlp_")
+    return h, kvs
+
+
+def build_vlm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    kind = shape.kind
+    dh = cfg.head_dim
+    D = cfg.d_model
+    n_groups = cfg.n_layers // cfg.cross_every
+    specs, inits = _vlm_group_specs(cfg)
+
+    def project_vision(images: Value) -> Value:
+        wv = b.param("vision_proj/w", (cfg.vision_dim, D), ("embed", "embed"))
+        return C.constrain(ops.matmul(images, wv), ("batch", None, None))
+
+    if kind in ("train", "prefill"):
+        S = shape.seq_len
+        tokens = b.input("tokens", (batch, S))
+        labels = b.input("labels", (batch, S)) if kind == "train" else None
+        images = b.input("images", (batch, cfg.vision_tokens, cfg.vision_dim),
+                         dtype=cfg.compute_dtype, spec=("batch", None, None))
+        vis = project_vision(images)
+        h = _embed(b, cfg, tokens)
+        cos, sin = C.rope_tables(b, S, dh, cfg.rope_base)
+        want_kv = kind == "prefill"
+
+        def body(carries, w, consts):
+            hh, kvs = _vlm_group(b, cfg, carries[0], w,
+                                 (consts[0], consts[1]), consts[2],
+                                 return_kv=want_kv)
+            return [hh], kvs
+
+        (h,), ys = b.scan_blocks(
+            "groups", n_groups, specs, body, [h], consts=[cos, sin, vis],
+            n_ys=2 * cfg.cross_every if want_kv else 0, weight_inits=inits)
+        if kind == "train":
+            return ModelGraphs(cfg, kind, b.finish(
+                [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
+        logits = _final_logits(b, cfg, h, last_only=True)
+        return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                               f"{cfg.name}_prefill"), b, {})
+
+    # decode
+    Skv = _cache_len(cfg, shape)
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    xs_extra: Dict[str, Value] = {}
+    for i in range(cfg.cross_every):
+        xs_extra[f"s{i}_ck"] = b.input(
+            f"g_{i}_ck", (n_groups, batch, cfg.n_kv_heads, Skv, dh),
+            dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+        xs_extra[f"s{i}_cv"] = b.input(
+            f"g_{i}_cv", (n_groups, batch, cfg.n_kv_heads, Skv, dh),
+            dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    xs_extra["vxk"] = b.input(
+        "vis_k", (n_groups, batch, cfg.n_kv_heads, cfg.vision_tokens, dh),
+        dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    xs_extra["vxv"] = b.input(
+        "vis_v", (n_groups, batch, cfg.n_kv_heads, cfg.vision_tokens, dh),
+        dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    h = _embed(b, cfg, token)
+    cos, sin = C.rope_tables(b, 1, dh, cfg.rope_base, offset=pos)
+
+    def body(carries, w, consts):
+        hh, kvs = _vlm_group(b, cfg, carries[0], w, (consts[0], consts[1]),
+                             None, decode=True, pos=consts[2])
+        return [hh], kvs
+
+    (h,), ys = b.scan_blocks("groups", n_groups, specs, body, [h],
+                             consts=[cos, sin, pos], xs_extra=xs_extra,
+                             n_ys=2 * cfg.cross_every, weight_inits=inits)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
+                                           f"{cfg.name}_decode"), b, {})
+
+
+# =============================================================================
+# dispatch
+# =============================================================================
+_FAMILIES = {
+    "dense": build_dense,
+    "moe": build_moe,
+    "mla_moe": build_mla_moe,
+    "rg_hybrid": build_rg,
+    "xlstm": build_xlstm,
+    "encdec": build_encdec,
+    "vlm": build_vlm,
+}
+
+
+def build_graphs(cfg: ModelConfig, shape: ShapeConfig,
+                 batch: Optional[int] = None) -> ModelGraphs:
+    if cfg.family not in _FAMILIES:
+        raise KeyError(f"unknown family {cfg.family}")
+    return _FAMILIES[cfg.family](cfg, shape, batch or shape.global_batch)

@@ -1,0 +1,2 @@
+"""Runtime substrates: sharding policy, checkpointing, data pipeline,
+fault tolerance."""

@@ -1,0 +1,114 @@
+"""The IR cost model and the while-aware HLO collective parser — the two
+meters the roofline report stands on."""
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.cost import function_cost
+from repro.core.function import Function
+from repro.launch.roofline import (CollectiveCensus, Roofline,
+                                   parse_collectives)
+
+
+def test_dot_flops_exact():
+    a = ops.parameter((64, 128), "f32", "a")
+    b = ops.parameter((128, 32), "f32", "b")
+    fn = Function([a, b], [ops.matmul(a.out(), b.out())])
+    c = function_cost(fn)
+    assert c.flops == 2 * 64 * 128 * 32
+    assert c.bytes == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_attention_flops_window_aware():
+    q = ops.parameter((1, 1, 1024, 64), "f32", "q")
+    k = ops.parameter((1, 1, 1024, 64), "f32", "k")
+    v = ops.parameter((1, 1, 1024, 64), "f32", "v")
+    full = Function([q, k, v], [ops.attention(q.out(), k.out(), v.out(),
+                                              causal=False)])
+    causal = Function([q, k, v], [ops.attention(q.out(), k.out(), v.out(),
+                                                causal=True)])
+    win = Function([q, k, v], [ops.attention(q.out(), k.out(), v.out(),
+                                             causal=True, window=128)])
+    cf = function_cost(full).flops
+    cc = function_cost(causal).flops
+    cw = function_cost(win).flops
+    assert cc == pytest.approx(cf / 2, rel=1e-6)   # causal: half the pairs
+    assert cw == pytest.approx(cf / 8, rel=1e-6)   # window 128 of 1024
+
+
+def test_flash_vs_chunked_bytes():
+    q = ops.parameter((2, 4, 512, 128), "bf16", "q")
+    k = ops.parameter((2, 4, 512, 128), "bf16", "k")
+    v = ops.parameter((2, 4, 512, 128), "bf16", "v")
+    fn = Function([q, k, v], [ops.attention(q.out(), k.out(), v.out())])
+    chunked = function_cost(fn, attn_impl="chunked").bytes
+    flash = function_cost(fn, attn_impl="flash").bytes
+    # flash never writes the (Sq x Skv) scores: the delta is exactly that
+    eff = 512 * 512 / 2  # causal default
+    assert chunked - flash == pytest.approx(2 * 2 * 4 * eff * 4, rel=1e-6)
+
+
+def test_nested_scan_cost_multiplies():
+    ci = ops.parameter((4,), "f32", "c")
+    xi = ops.parameter((4,), "f32", "x")
+    inner = Function([ci, xi], [ops.tanh(ci.out() * xi.out())])
+    co = ops.parameter((4,), "f32", "co")
+    xo = ops.parameter((3, 4), "f32", "xo")
+    inner_out = ops.scan(inner, [co.out()], xs=[xo.out()])
+    outer = Function([co, xo], [inner_out[0]])
+    init = ops.parameter((4,), "f32", "i")
+    xs = ops.parameter((5, 3, 4), "f32", "xs")
+    outs = ops.scan(outer, [init.out()], xs=[xs.out()])
+    fn = Function([init, xs], [outs[0]])
+    per_cell = function_cost(inner).flops
+    assert function_cost(fn).flops == pytest.approx(per_cell * 3 * 5)
+
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %ar = f32[128]{0} all-reduce(%gte), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p2 = (s32[], f32[128]) parameter(0)
+  ROOT %lt = pred[] compare(%gte2, s32[] constant(7)), direction=LT
+}
+
+ENTRY %main () -> f32[128] {
+  %ag = f32[256]{0} all-gather(%x), replica_groups=[2,8]<=[16], dimensions={0}
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_scales_while_bodies():
+    census = parse_collectives(HLO, 16)
+    # all-gather at entry: 256*4 bytes * (8-1)/8
+    ag = census.bytes_by_kind["all-gather"]
+    assert ag == pytest.approx(256 * 4 * 7 / 8)
+    # all-reduce inside the while body: x7 trips, group 4, 2x ring factor
+    ar = census.bytes_by_kind["all-reduce"]
+    assert ar == pytest.approx(7 * 2 * 128 * 4 * 3 / 4)
+    assert census.counts["all-reduce"] == 7
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", n_devices=256,
+                 hlo_flops=1.0, hlo_bytes=1.0,
+                 ir_flops=197e12 * 256,          # exactly 1 s of compute
+                 ir_bytes=819e9 * 256 * 2,       # 2 s of memory
+                 collective_bytes=50e9 * 0.5,    # 0.5 s of collectives
+                 model_flops=197e12 * 256,
+                 collectives={}, coll_bytes_by_kind={},
+                 per_device_memory=1.0)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.5)
+    assert r.useful_flops_ratio == pytest.approx(1.0)

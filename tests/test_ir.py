@@ -1,0 +1,104 @@
+"""IR construction, shape/type inference, graph transforms."""
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.function import Function, topo_sort, transform
+from repro.core.types import TensorType, as_dtype, promote_dtypes
+
+
+def test_tensor_type():
+    t = TensorType((2, 3), "f32")
+    assert t.rank == 2 and t.size == 6 and t.nbytes == 24
+    assert repr(t) == "f32[2,3]"
+    with pytest.raises(ValueError):
+        TensorType((-1, 2))
+    with pytest.raises(TypeError):
+        as_dtype("float128")
+
+
+def test_promotion():
+    assert promote_dtypes("f32", "bf16") == as_dtype("f32")
+    assert promote_dtypes("bf16", "f16") == as_dtype("f32")
+    assert promote_dtypes("i32", "i8") == as_dtype("i32")
+    assert promote_dtypes("f32", "i32") == as_dtype("f32")
+
+
+def test_eager_shape_inference():
+    a = ops.parameter((2, 3), "f32", "a").out()
+    b = ops.parameter((3, 4), "f32", "b").out()
+    c = ops.matmul(a, b)
+    assert c.shape == (2, 4)
+    with pytest.raises(ValueError):
+        ops.matmul(b, b)  # 3x4 @ 3x4
+    with pytest.raises(ValueError):
+        ops.reshape(a, (7,))
+    with pytest.raises(ValueError):
+        ops.concat([a, b], axis=0)
+
+
+def test_ill_typed_graph_unbuildable():
+    x = ops.parameter((4,), "i32", "x").out()
+    with pytest.raises(TypeError):
+        ops.exp(x)  # float-only op on int
+    with pytest.raises(TypeError):
+        ops.gather(x, ops.constant(np.array([0.5], np.float32)))
+
+
+def test_topo_sort_deterministic_and_cycle_free():
+    a = ops.parameter((2,), "f32", "a")
+    x = a.out() + 1.0
+    y = x * x
+    fn = Function([a], [y])
+    order = [n.op for n in topo_sort([y])]
+    assert order.index("Parameter") < order.index("Add") < order.index("Multiply")
+    assert len(fn.nodes()) == len(set(id(n) for n in fn.nodes()))
+
+
+def test_undeclared_parameter_rejected():
+    a = ops.parameter((2,), "f32", "a")
+    b = ops.parameter((2,), "f32", "b")
+    with pytest.raises(ValueError):
+        Function([a], [a.out() + b.out()])
+
+
+def test_transform_rewrites_and_type_checks():
+    a = ops.parameter((2,), "f32", "a")
+    y = ops.exp(a.out()) * 1.0
+    fn = Function([a], [y])
+
+    def rule(node, ins):
+        if node.op == "Exp":
+            return [ops.log(ins[0])]  # same type: allowed
+        return None
+
+    out = transform(fn, rule)
+    assert "Log" in out.op_counts() and "Exp" not in out.op_counts()
+
+    def bad_rule(node, ins):
+        if node.op == "Exp":
+            return [ops.reduce_sum(ins[0])]  # shape change: rejected
+        return None
+
+    with pytest.raises(ValueError):
+        transform(fn, bad_rule)
+
+
+def test_multi_output_ops():
+    x = ops.parameter((3, 5), "f32", "x").out()
+    vals, idx = ops.top_k(x, 2)
+    assert vals.shape == (3, 2) and idx.shape == (3, 2)
+    assert idx.dtype == as_dtype("i32")
+
+
+def test_scan_type_checking():
+    c = ops.parameter((2,), "f32", "c")
+    xx = ops.parameter((2,), "f32", "x")
+    body = Function([c, xx], [c.out() + xx.out()])
+    init = ops.constant(np.zeros(2, np.float32))
+    xs = ops.constant(np.ones((5, 2), np.float32))
+    outs = ops.scan(body, [init], xs=[xs])
+    assert outs[0].shape == (2,)
+    bad_init = ops.constant(np.zeros(3, np.float32))
+    with pytest.raises(ValueError):
+        ops.scan(body, [bad_init], xs=[xs])

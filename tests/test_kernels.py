@@ -1,0 +1,104 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles in
+ref.py, executed in interpret mode on CPU."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.ref import attention_ref, matmul_ref, rmsnorm_ref
+from repro.kernels.xla_attention import chunked_attention
+
+RNG = np.random.default_rng(5)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("rows,d", [(8, 128), (32, 256), (64, 512), (8, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(rows, d)), dtype)
+    w = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    assert kops.rmsnorm_supported(x.shape)
+    out = kops.rmsnorm(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(rmsnorm_ref(x, w), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (384, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)), dtype)
+    out = kops.matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(matmul_ref(a, b), np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Skv, Dk, Dv, causal, window, offset
+    (1, 2, 2, 128, 128, 128, 128, True, None, None),
+    (2, 4, 2, 256, 256, 128, 128, True, None, None),
+    (1, 2, 1, 128, 512, 128, 128, True, None, 384),   # decode-with-cache
+    (1, 4, 4, 256, 256, 128, 128, True, 64, None),    # sliding window
+    (1, 2, 2, 128, 128, 128, 256, False, None, None),  # Dv != Dk, bidir
+    (1, 8, 1, 128, 256, 128, 128, True, 100, 128),    # MQA + window + offset
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Hq, Hkv, Sq, Skv, Dk, Dv, causal, window, offset = case
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, Dk)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, Dk)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, Dv)), dtype)
+    off = None if offset is None else jnp.int32(offset)
+    assert kops.attention_supported(q.shape, k.shape)
+    out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=off, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_chunked_attention_sweep(case):
+    """The XLA (dry-run) realization must match the oracle too."""
+    B, Hq, Hkv, Sq, Skv, Dk, Dv, causal, window, offset = case
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, Dv)), jnp.float32)
+    off = None if offset is None else jnp.int32(offset)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_offset=off, bk=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_fully_masked_rows_are_zero():
+    """Window smaller than the gap: some rows see no keys at all."""
+    q = jnp.asarray(RNG.normal(size=(1, 1, 128, 128)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 128, 128)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 1, 128, 128)), jnp.float32)
+    # q_offset far beyond Skv + window=1: every row fully masked
+    out = kops.flash_attention(q, k, v, causal=True, window=1,
+                               q_offset=jnp.int32(4096), interpret=True)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_kernel_selection_predicates():
+    # Skv=1000 has no 128-aligned tiling -> falls back to generic emission
+    assert not kops.attention_supported((2, 4, 512, 128), (2, 2, 1000, 128))
+    assert not kops.attention_supported((2, 4, 128, 96), (2, 2, 128, 96))
+    assert kops.attention_supported((1, 1, 128, 128), (1, 1, 896, 128))
+    assert not kops.rmsnorm_supported((7, 100))
+    assert kops.rmsnorm_supported((16, 256))

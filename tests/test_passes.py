@@ -1,0 +1,171 @@
+"""Compiler passes: folding/CSE/DCE/algebraic, decompose<->fuse
+round-trip (compounding, claim E6), layout, memory planning (E4),
+gradient compression."""
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.function import Function
+from repro.core.passes import (CSE, DCE, AlgebraicSimplify, CompressAllReduce,
+                               ConstantFolding, Decompose, FuseCompounds,
+                               LayoutAssignment, plan_memory, run_pipeline)
+from repro.transformers import get_transformer
+
+RNG = np.random.default_rng(11)
+
+
+def run_both(fn, *args):
+    return get_transformer("interpreter").compile(fn)(*args)
+
+
+def test_constant_folding():
+    x = ops.parameter((2,), "f32", "x")
+    c = ops.constant(np.ones(2, np.float32)) + ops.constant(np.ones(2, np.float32))
+    y = x.out() + c
+    fn = Function([x], [y])
+    out, stats = ConstantFolding().run(fn)
+    assert stats["folded"] >= 1
+    assert out.op_counts().get("Add", 0) == 1  # only the x + const add remains
+
+
+def test_cse_and_dce():
+    x = ops.parameter((3,), "f32", "x")
+    a = ops.exp(x.out())
+    bb = ops.exp(x.out())  # duplicate
+    dead = ops.log(ops.abs_(x.out()) + 1.0)  # unused
+    del dead
+    fn = Function([x], [a + bb])
+    out, stats = CSE().run(fn)
+    assert out.op_counts()["Exp"] == 1
+    arr = RNG.normal(size=(3,)).astype(np.float32)
+    np.testing.assert_allclose(run_both(fn, arr)[0], run_both(out, arr)[0],
+                               rtol=1e-6)
+
+
+def test_algebraic():
+    x = ops.parameter((3,), "f32", "x")
+    y = (x.out() * 1.0 + 0.0) / 1.0
+    fn = Function([x], [y])
+    out, _ = AlgebraicSimplify().run(fn)
+    counts = out.op_counts()
+    assert counts.get("Multiply", 0) == 0 and counts.get("Divide", 0) == 0
+
+
+def test_decompose_fuse_roundtrip():
+    """decompose -> fuse restores the compounds (paper's compounding)."""
+    x = ops.parameter((4, 8, 16), "f32", "x")
+    w = ops.parameter((16,), "f32", "w")
+    y = ops.rms_norm(ops.silu(x.out()), w.out())
+    y = ops.softmax(y, axis=-1)
+    fn = Function([x, w], [y])
+    dec, dstats = Decompose().run(fn)
+    assert dstats["expanded"] >= 3
+    assert "RMSNorm" not in dec.op_counts()
+    fused, fstats = FuseCompounds().run(dec)
+    counts = fused.op_counts()
+    assert counts.get("RMSNorm", 0) == 1, counts
+    assert counts.get("Softmax", 0) == 1
+    assert fstats["silu"] >= 1
+    args = [RNG.normal(size=(4, 8, 16)).astype(np.float32),
+            RNG.normal(size=(16,)).astype(np.float32)]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(fused, *args)[0], atol=1e-5)
+
+
+def test_attention_refusion():
+    q = ops.parameter((2, 4, 6, 8), "f32", "q")
+    k = ops.parameter((2, 2, 6, 8), "f32", "k")
+    v = ops.parameter((2, 2, 6, 8), "f32", "v")
+    y = ops.attention(q.out(), k.out(), v.out(), causal=True, window=3)
+    fn = Function([q, k, v], [y])
+    dec, _ = Decompose().run(fn)
+    assert "Attention" not in dec.op_counts()
+    fused, fstats = FuseCompounds().run(dec)
+    assert fstats["attention"] == 1
+    node = [n for n in fused.nodes() if n.op == "Attention"][0]
+    assert node.attrs["causal"] and node.attrs["window"] == 3
+    args = [RNG.normal(size=(2, 4, 6, 8)).astype(np.float32),
+            RNG.normal(size=(2, 2, 6, 8)).astype(np.float32),
+            RNG.normal(size=(2, 2, 6, 8)).astype(np.float32)]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(fused, *args)[0], atol=1e-4)
+
+
+def test_layout_transpose_sinking():
+    a = ops.parameter((4, 8), "f32", "a")
+    b = ops.parameter((8, 5), "f32", "b")
+    at = ops.transpose(a.out(), (1, 0))        # (8,4)
+    att = ops.transpose(at, (1, 0))            # chain collapses
+    y = ops.matmul(att, b.out())
+    fn = Function([a, b], [y])
+    out, stats = LayoutAssignment().run(fn)
+    assert stats["transposes_collapsed"] >= 1
+    args = [RNG.normal(size=(4, 8)).astype(np.float32),
+            RNG.normal(size=(8, 5)).astype(np.float32)]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(out, *args)[0], rtol=1e-5)
+
+
+def test_memory_plan_reuse_and_arena_execution():
+    """The arena plan reuses buffers AND executing inside the arena gives
+    identical results (aliasing soundness, claim E4)."""
+    x = ops.parameter((64, 64), "f32", "x")
+    h = x.out()
+    for _ in range(6):
+        h = ops.tanh(h * 1.01 + 0.1)
+    fn = Function([x], [ops.reduce_sum(h)])
+    plan = plan_memory(fn)
+    assert plan.reuse_fraction > 0.5  # chain of temps collapses to ~2 buffers
+    assert plan.arena_bytes >= plan.peak_live_bytes
+    arr = RNG.normal(size=(64, 64)).astype(np.float32)
+    plain = get_transformer("interpreter").compile(fn)(arr)
+    arena = get_transformer("interpreter").compile(fn, arena=plan)(arr)
+    np.testing.assert_allclose(plain[0], arena[0], rtol=1e-6)
+
+
+def test_memory_plan_no_live_overlap():
+    x = ops.parameter((16, 16), "f32", "x")
+    h = x.out()
+    keep = []
+    for i in range(5):
+        h = ops.exp(h * 0.1)
+        keep.append(h)
+    fn = Function([x], [ops.reduce_sum(sum(keep[1:], keep[0]))])
+    plan = plan_memory(fn)
+    from repro.core.passes.liveness import liveness_intervals
+    order, intervals = liveness_intervals(fn)
+    assigns = [(intervals[k], a) for k, a in plan.assignments.items()]
+    for i, ((d1, u1), a1) in enumerate(assigns):
+        for (d2, u2), a2 in assigns[i + 1:]:
+            live_overlap = not (u1 < d2 or u2 < d1)
+            mem_overlap = not (a1.offset + a1.size <= a2.offset
+                               or a2.offset + a2.size <= a1.offset)
+            assert not (live_overlap and mem_overlap)
+
+
+def test_grad_compression_pass():
+    x = ops.parameter((1 << 15,), "f32", "g")
+    y = ops.all_reduce(x.out(), "data")
+    fn = Function([x], [y])
+    out, stats = CompressAllReduce().run(fn)
+    assert stats["compressed"] == 1
+    counts = out.op_counts()
+    assert counts["Convert"] == 2 and counts["AllReduce"] == 1
+    small = ops.parameter((8,), "f32", "g2")
+    fn2 = Function([small], [ops.all_reduce(small.out(), "data")])
+    _, stats2 = CompressAllReduce().run(fn2)
+    assert stats2["compressed"] == 0  # too small to bother
+
+
+def test_full_pipeline_preserves_semantics():
+    x = ops.parameter((4, 16), "f32", "x")
+    w = ops.parameter((16,), "f32", "w")
+    y = ops.softmax(ops.rms_norm(ops.gelu(x.out() * 1.0), w.out()), axis=-1)
+    fn = Function([x, w], [y])
+    dec, _ = Decompose().run(fn)
+    out, report = run_pipeline(dec, "O2")
+    assert report.nodes_after <= report.nodes_before
+    args = [RNG.normal(size=(4, 16)).astype(np.float32),
+            np.abs(RNG.normal(size=(16,))).astype(np.float32)]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(out, *args)[0], atol=1e-5)

@@ -1,0 +1,125 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops, serialize
+from repro.core.autodiff import grad
+from repro.core.cost import function_cost
+from repro.core.function import Function
+from repro.core.passes import CSE, DCE, ConstantFolding, plan_memory
+from repro.core.passes.liveness import liveness_intervals
+from repro.transformers import get_transformer
+
+IT = get_transformer("interpreter")
+JT = get_transformer("jax")
+
+
+@st.composite
+def elementwise_graph(draw):
+    """A random elementwise DAG over one (r, c) input."""
+    r = draw(st.integers(1, 4))
+    c = draw(st.integers(1, 5))
+    x = ops.parameter((r, c), "f32", "x")
+    pool = [x.out()]
+    n_ops = draw(st.integers(1, 8))
+    for _ in range(n_ops):
+        k = draw(st.integers(0, 4))
+        a = pool[draw(st.integers(0, len(pool) - 1))]
+        if k == 0:
+            pool.append(ops.tanh(a))
+        elif k == 1:
+            pool.append(ops.sigmoid(a))
+        elif k == 2:
+            b = pool[draw(st.integers(0, len(pool) - 1))]
+            pool.append(a + b)
+        elif k == 3:
+            b = pool[draw(st.integers(0, len(pool) - 1))]
+            pool.append(a * b)
+        else:
+            pool.append(a * draw(st.floats(-2, 2,
+                                           allow_nan=False)))
+    return Function([x], [pool[-1]]), (r, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(elementwise_graph(), st.integers(0, 2**31 - 1))
+def test_backends_agree_on_random_graphs(fg, seed):
+    fn, (r, c) = fg
+    x = np.random.default_rng(seed).normal(size=(r, c)).astype(np.float32)
+    a = IT.compile(fn)(x)[0]
+    b = JT.compile(fn)(x)[0]
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(elementwise_graph(), st.integers(0, 2**31 - 1))
+def test_passes_preserve_semantics(fg, seed):
+    fn, (r, c) = fg
+    x = np.random.default_rng(seed).normal(size=(r, c)).astype(np.float32)
+    base = IT.compile(fn)(x)[0]
+    out = fn
+    for p in (ConstantFolding(), CSE(), DCE()):
+        out, _ = p.run(out)
+    np.testing.assert_allclose(IT.compile(out)(x)[0], base, atol=1e-5)
+    assert len(out.nodes()) <= len(fn.nodes())
+
+
+@settings(max_examples=15, deadline=None)
+@given(elementwise_graph(), st.integers(0, 2**31 - 1))
+def test_grad_matches_finite_difference_direction(fg, seed):
+    fn, (r, c) = fg
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(r, c)).astype(np.float32)
+    loss_fn = Function(fn.parameters, [ops.reduce_sum(fn.results[0])])
+    gfn = grad(loss_fn)
+    outs = JT.compile(gfn)(x)
+    g = np.asarray(outs[1], np.float64)
+    d = rng.normal(size=(r, c)).astype(np.float32) * 1e-3
+    f0 = float(JT.compile(loss_fn)(x)[0])
+    f1 = float(JT.compile(loss_fn)(x + d)[0])
+    pred = float((g * d).sum())
+    np.testing.assert_allclose(f1 - f0, pred, atol=5e-4 + 0.05 * abs(pred))
+
+
+@settings(max_examples=15, deadline=None)
+@given(elementwise_graph())
+def test_memory_plan_invariants(fg):
+    fn, _ = fg
+    plan = plan_memory(fn)
+    order, intervals = liveness_intervals(fn)
+    # no two simultaneously-live buffers overlap in the arena
+    items = [(intervals[k], a) for k, a in plan.assignments.items()]
+    for i, ((d1, u1), a1) in enumerate(items):
+        assert a1.offset % 128 == 0  # alignment
+        for (d2, u2), a2 in items[i + 1:]:
+            if not (u1 < d2 or u2 < d1):
+                assert (a1.offset + a1.size <= a2.offset
+                        or a2.offset + a2.size <= a1.offset)
+    assert plan.arena_bytes <= max(plan.naive_bytes, 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(elementwise_graph(), st.integers(0, 2**31 - 1))
+def test_serialize_roundtrip(fg, seed):
+    fn, (r, c) = fg
+    x = np.random.default_rng(seed).normal(size=(r, c)).astype(np.float32)
+    fn2 = serialize.loads(serialize.dumps(fn))
+    np.testing.assert_allclose(IT.compile(fn)(x)[0], IT.compile(fn2)(x)[0],
+                               atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4))
+def test_cost_model_scan_linearity(length, width):
+    """Scanning L times costs exactly L x the body (the property XLA's
+    cost_analysis lacks and the roofline depends on)."""
+    c = ops.parameter((width,), "f32", "c")
+    x = ops.parameter((width,), "f32", "x")
+    body = Function([c, x], [ops.tanh(c.out() * x.out())])
+    init = ops.parameter((width,), "f32", "i")
+    xs = ops.parameter((length, width), "f32", "xs")
+    outs = ops.scan(body, [init.out()], xs=[xs.out()])
+    fn = Function([init, xs], [outs[0]])
+    inner = function_cost(body)
+    total = function_cost(fn)
+    np.testing.assert_allclose(total.flops, inner.flops * length)

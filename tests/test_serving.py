@@ -1,0 +1,116 @@
+"""Serving-path correctness: teacher-forced decode through the KV cache
+must reproduce the prefill logits (the strongest cache-consistency check
+we can run on CPU)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models.lm import build_graphs
+from repro.transformers import get_transformer
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen1.5-110b",
+                                  "mixtral-8x22b"])
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch).reduced()
+    B, P = 2, 12
+    rng = np.random.default_rng(0)
+    jt = get_transformer("jax")
+
+    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
+    params = pre.builder.init_params(0)
+    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
+    pouts = jt.compile(pre.fn)(
+        prompts, *[params[n] for n in pre.builder.param_names()])
+    prefill_logits = np.asarray(pouts[0]).reshape(B, -1)
+
+    # teacher-forced decode: feed the prompt token by token from empty cache
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", P, B), B)
+    dparams = dec.builder.init_params(0)  # same seed -> same weights
+    dex = jt.compile(dec.fn)
+    caches = []
+    for node in dec.builder.inputs:
+        if node.name in ("token", "pos"):
+            continue
+        t = node.out_types[0]
+        caches.append(np.zeros(t.shape, t.dtype))
+    logits = None
+    for t_i in range(P):
+        tok = prompts[:, t_i:t_i + 1]
+        outs = dex(tok, np.int32(t_i), *caches,
+                   *[dparams[n] for n in dec.builder.param_names()])
+        logits = np.asarray(outs[0]).reshape(B, -1)
+        caches = [np.asarray(o) for o in outs[1:]]
+
+    np.testing.assert_allclose(logits, prefill_logits, atol=3e-2, rtol=3e-2)
+    # and the argmax (the actual served token) agrees
+    assert np.array_equal(np.argmax(logits, -1),
+                          np.argmax(prefill_logits, -1))
+
+
+def test_mla_latent_decode_matches_prefill():
+    """DeepSeek-V3: absorbed latent-cache decode must equal the expanded
+    attention the prefill ran (MLA's algebraic identity)."""
+    cfg = get_config("deepseek-v3-671b").reduced()
+    B, P = 2, 8
+    rng = np.random.default_rng(0)
+    jt = get_transformer("jax")
+    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
+    params = pre.builder.init_params(0)
+    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
+    pouts = jt.compile(pre.fn)(
+        prompts, *[params[n] for n in pre.builder.param_names()])
+    prefill_logits = np.asarray(pouts[0]).reshape(B, -1)
+
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", P, B), B)
+    dparams = dec.builder.init_params(0)
+    dex = jt.compile(dec.fn)
+    caches = [np.zeros(n.out_types[0].shape, n.out_types[0].dtype)
+              for n in dec.builder.inputs if n.name not in ("token", "pos")]
+    logits = None
+    for t_i in range(P):
+        outs = dex(prompts[:, t_i:t_i + 1], np.int32(t_i), *caches,
+                   *[dparams[n] for n in dec.builder.param_names()])
+        logits = np.asarray(outs[0]).reshape(B, -1)
+        caches = [np.asarray(o) for o in outs[1:]]
+    np.testing.assert_allclose(logits, prefill_logits, atol=5e-2, rtol=5e-2)
+    assert np.array_equal(np.argmax(logits, -1),
+                          np.argmax(prefill_logits, -1))
+
+
+def test_ring_buffer_swa_decode():
+    """Mixtral long-context: ring-cache decode equals full-cache decode
+    once the window is saturated (steady state)."""
+    cfg = get_config("mixtral-8x22b").reduced()  # window=8
+    B = 2
+    W = cfg.window
+    total = 3 * W  # decode well past the window
+    rng = np.random.default_rng(1)
+    jt = get_transformer("jax")
+
+    full = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+    ring = build_graphs(cfg, ShapeConfig("long", "long_decode", total, B), B)
+    fparams = full.builder.init_params(0)
+    rparams = ring.builder.init_params(0)
+    fex = jt.compile(full.fn)
+    rex = jt.compile(ring.fn)
+
+    fcaches = [np.zeros(n.out_types[0].shape, n.out_types[0].dtype)
+               for n in full.builder.inputs if n.name not in ("token", "pos")]
+    rcaches = [np.zeros(n.out_types[0].shape, n.out_types[0].dtype)
+               for n in ring.builder.inputs if n.name not in ("token", "pos")]
+    toks = rng.integers(0, cfg.vocab, size=(B, total, 1)).astype(np.int32)
+    fl = rl = None
+    for t_i in range(total):
+        fouts = fex(toks[:, t_i], np.int32(t_i), *fcaches,
+                    *[fparams[n] for n in full.builder.param_names()])
+        routs = rex(toks[:, t_i], np.int32(t_i), *rcaches,
+                    *[rparams[n] for n in ring.builder.param_names()])
+        fl = np.asarray(fouts[0]).reshape(B, -1)
+        rl = np.asarray(routs[0]).reshape(B, -1)
+        fcaches = [np.asarray(o) for o in fouts[1:]]
+        rcaches = [np.asarray(o) for o in routs[1:]]
+    # steady state: same distribution from O(W) state as from O(T) cache
+    np.testing.assert_allclose(rl, fl, atol=5e-2, rtol=5e-2)
+    assert np.array_equal(np.argmax(rl, -1), np.argmax(fl, -1))

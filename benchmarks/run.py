@@ -8,6 +8,7 @@
   E6 compounding  — decompose->fuse recovery; kernel-selection byte savings
   E7 collectives  — gradient-compression pass wire-byte savings
   E8 scaling      — dry-run roofline table (reads results/dryrun/*.json)
+  E9 compile_cache— Backend compile cache: cold vs cached decode compile
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
 diffing across commits.  ``python -m benchmarks.run [section ...]``
@@ -40,8 +41,8 @@ def _timeit(f, n=5):
 
 # =============================================================================
 def bench_bridges():
+    from repro.backend import Backend
     from repro.bridges import neon, onnx_like
-    from repro.transformers import get_transformer
 
     net = neon.Sequential([neon.Dense(64, 256, activation="tanh", seed=1),
                            neon.Dense(256, 10, name="out", seed=2)])
@@ -58,16 +59,17 @@ def bench_bridges():
     x = np.random.default_rng(0).normal(size=(32, 64)).astype(np.float32)
     labels = np.zeros((32,), np.int32)
     args = [x, labels] + [model.param_values[n] for n in names]
-    a = get_transformer("jax").compile(fn)(*args)
-    b = get_transformer("jax").compile(fn2)(*args)
+    be = Backend.create("jax")
+    a = be.compile(fn)(*args)
+    b = be.compile(fn2)(*args)
     emit("E1_bridges", "import_export_max_abs_diff",
          float(np.abs(np.asarray(a[0]) - np.asarray(b[0])).max()), "")
 
 
 def bench_backends():
+    from repro.backend import Backend
     from repro.core import ops
     from repro.core.function import Function
-    from repro.transformers import get_transformer
 
     x = ops.parameter((64, 512), "f32", "x")
     w = ops.parameter((512, 512), "f32", "w")
@@ -78,8 +80,8 @@ def bench_backends():
     args = [rng.normal(size=(64, 512)).astype(np.float32),
             rng.normal(size=(512, 512)).astype(np.float32),
             np.ones(512, np.float32)]
-    it = get_transformer("interpreter").compile(fn)
-    jt = get_transformer("jax").compile(fn)
+    it = Backend.create("interpreter").compile(fn)
+    jt = Backend.create("jax").compile(fn)
     d = float(np.abs(np.asarray(it(*args)[0]) - np.asarray(jt(*args)[0])).max())
     emit("E2_backends", "interpreter_vs_xla_max_abs_diff", d, "")
     emit("E2_backends", "interpreter_ms", _timeit(lambda: it(*args)) * 1e3, "ms")
@@ -89,11 +91,10 @@ def bench_backends():
 def bench_autodiff():
     import jax
 
+    from repro.backend import Backend, CompileOptions
     from repro.core import ops
     from repro.core.autodiff import grad
     from repro.core.function import Function
-    from repro.transformers import get_transformer
-    from repro.transformers.jax_backend import emit_callable
 
     x = ops.parameter((16, 128), "f32", "x")
     w1 = ops.parameter((128, 256), "f32", "w1")
@@ -113,8 +114,9 @@ def bench_autodiff():
             rng.normal(size=(128, 256)).astype(np.float32),
             rng.normal(size=(256, 128)).astype(np.float32),
             rng.integers(0, 128, size=(16,)).astype(np.int32)]
-    outs = get_transformer("jax").compile(gfn)(*args)
-    fwd = emit_callable(fn)
+    be = Backend.create("jax")
+    outs = be.compile(gfn)(*args)
+    fwd = be.compile(fn, CompileOptions(level="O0", static_jit=False)).raw
     jg = jax.grad(lambda w1, w2: fwd(args[0], w1, w2, args[3])[0],
                   argnums=(0, 1))(args[1], args[2])
     d = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
@@ -236,6 +238,38 @@ def bench_collectives():
     emit("E7_collectives", "compressed_ops", stats["compressed"], "ops")
 
 
+def bench_compile_cache():
+    """Cold-compile vs cached-compile latency for the serving decode step
+    (the Function repro.launch.serve steps token by token)."""
+    from repro.backend import Backend, CompileOptions
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+
+    cfg = get_config("deepseek-7b").reduced()
+    B, total = 4, 48
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+    be = Backend.create("jax", fresh=True)
+    opts = CompileOptions()
+
+    t0 = time.perf_counter()
+    cf = be.compile(dec.fn, opts).warmup()  # include XLA compile time
+    cold_s = time.perf_counter() - t0
+    emit("E9_compile_cache", "cold_compile_ms", cold_s * 1e3, "ms")
+
+    # a fresh serve session rebuilds the graph; structural signature hits
+    dec2 = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+    t0 = time.perf_counter()
+    cf2 = be.compile(dec2.fn, opts)
+    cached_s = time.perf_counter() - t0
+    assert cf2 is cf, "expected compile-cache hit"
+    emit("E9_compile_cache", "cached_compile_ms", cached_s * 1e3, "ms")
+    emit("E9_compile_cache", "speedup_x", cold_s / max(cached_s, 1e-9), "x")
+    st = be.cache_stats()
+    emit("E9_compile_cache", "hits", st.hits, "")
+    emit("E9_compile_cache", "misses", st.misses, "")
+
+
 def bench_scaling():
     """The dry-run roofline table (claim E8 / deliverable g)."""
     base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -261,14 +295,14 @@ def bench_train_loop():
     from repro.models.lm import build_graphs
     from repro.models.train_graph import init_opt_state, make_train_step
     from repro.runtime.data import DataConfig, SyntheticLM
-    from repro.transformers import get_transformer
+    from repro.backend import Backend
 
     cfg = get_config("deepseek-7b").reduced()
     g = build_graphs(cfg, ShapeConfig("train", "train", 32, 8), 8)
     ts = make_train_step(g, cfg)
     params = g.builder.init_params(0)
     m, v = init_opt_state(g.builder, cfg, params)
-    ex = get_transformer("jax").compile(ts.fn)
+    ex = Backend.create("jax").compile(ts.fn)
     data = SyntheticLM(DataConfig(cfg.vocab, 32, 8))
     flat = [params[n] for n in ts.param_names] + \
         [m[n] for n in ts.param_names] + [v[n] for n in ts.param_names]
@@ -293,6 +327,7 @@ SECTIONS = {
     "layout": bench_layout,
     "compounding": bench_compounding,
     "collectives": bench_collectives,
+    "compile_cache": bench_compile_cache,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,
 }

@@ -11,8 +11,8 @@ import numpy as np
 
 from repro import ng
 from repro.bridges import neon, onnx_like
+from repro.backend import Backend, available_backends
 from repro.core import Function
-from repro.transformers import available_transformers, get_transformer
 
 rng = np.random.default_rng(0)
 
@@ -38,11 +38,11 @@ fn_import = onnx_like.import_graph(onnx_like.export_graph(fn_neon))
 
 inp = rng.normal(size=(4, 32)).astype(np.float32)
 args = [inp] + [model.param_values[n] for n in names]
-print("transformers:", available_transformers())
-for tname in ("interpreter", "jax"):
-    t = get_transformer(tname)
-    outs = [np.asarray(t.compile(f)(*args)[0])
+print("backends:", available_backends())
+for bname in ("interpreter", "jax"):
+    be = Backend.create(bname)
+    outs = [np.asarray(be.compile(f)(*args)[0])
             for f in (fn_neon, fn_func, fn_import)]
-    print(f"{tname:12s} neon-vs-func {np.abs(outs[0]-outs[1]).max():.2e}  "
+    print(f"{bname:12s} neon-vs-func {np.abs(outs[0]-outs[1]).max():.2e}  "
           f"neon-vs-import {np.abs(outs[0]-outs[2]).max():.2e}")
 print("one IR, three frontends, two backends: identical numerics.")

@@ -1,6 +1,6 @@
-"""Quickstart: build IR with the functional frontend, run compiler
-passes, execute on two transformers, take gradients — the whole nGraph
-pipeline in 60 lines.
+"""Quickstart: build IR with the functional frontend, compile it through
+the unified Backend API (pipeline + cache included), execute on two
+backends, take gradients — the whole nGraph pipeline in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,8 +12,7 @@ import numpy as np
 from repro import ng                       # the functional IR frontend
 from repro.core import Function
 from repro.core.autodiff import grad
-from repro.core.passes import Decompose, FuseCompounds, plan_memory, run_pipeline
-from repro.transformers import get_transformer
+from repro.backend import Backend, CompileOptions
 
 # 1. Build a graph: softmax(rms_norm(gelu(x @ w)) * g)
 x = ng.parameter((8, 64), "f32", "x")
@@ -23,32 +22,38 @@ y = ng.softmax(ng.rms_norm(ng.gelu(ng.matmul(x.out(), w.out())), g.out()), -1)
 fn = Function([x, w, g], [y])
 print("graph:", fn)
 
-# 2. Run the pass pipeline (constant folding / CSE / algebraic / layout)
-opt, report = run_pipeline(fn, level="O2")
-print(report.summary())
+# 2. One compile call runs the pass pipeline AND backend codegen.
+#    CompileOptions is the single declarative knob set (opt level, kernel
+#    selection, partitioning); the result carries the pipeline report.
+jax_be = Backend.create("jax")
+compiled = jax_be.compile(fn, CompileOptions(level="O2"))
+print(compiled.report.summary())
 
-# 3. The same IR executes on every transformer
+# 3. The same IR compiles on every backend — and executables support
+#    positional or named-parameter calling.
 rng = np.random.default_rng(0)
-args = [rng.normal(size=(8, 64)).astype(np.float32),
-        rng.normal(size=(64, 64)).astype(np.float32),
-        np.ones(64, np.float32)]
-ref = get_transformer("interpreter").compile(opt)(*args)[0]
-xla = get_transformer("jax").compile(opt)(*args)[0]
+args = dict(x=rng.normal(size=(8, 64)).astype(np.float32),
+            w=rng.normal(size=(64, 64)).astype(np.float32),
+            g=np.ones(64, np.float32))
+ref = Backend.create("interpreter").compile(fn)(**args)[0]
+xla = compiled(**args)[0]
 print("interpreter vs XLA max|diff|:", np.abs(ref - xla).max())
 
-# 4. Autodiff ON THE IR (not on traces): a gradient graph
+# 4. Compiles are memoized: a structurally-identical graph with the same
+#    options is a cache hit (this is what keeps serving fast).
+again = jax_be.compile(fn, CompileOptions(level="O2"))
+assert again is compiled
+print("compile cache:", jax_be.cache_stats())
+
+# 5. Autodiff ON THE IR (not on traces): a gradient graph, same API
 loss_fn = Function([x, w, g], [ng.reduce_mean(fn.results[0] * fn.results[0])])
 gfn = grad(loss_fn)
 print("grad graph:", len(gfn.nodes()), "nodes")
-grads = get_transformer("jax").compile(gfn)(*args)
+grads = jax_be.compile(gfn)(**args)
 print("dL/dw norm:", float(np.square(np.asarray(grads[2])).sum()) ** 0.5)
 
-# 5. Memory planning: liveness-driven arena with buffer reuse
-plan = plan_memory(opt)
-print("memory plan:", plan.summary())
-
-# 6. Compounding: decompose to primitives, pattern-match them back
-dec, _ = Decompose().run(fn)
-fused, stats = FuseCompounds().run(dec)
-print("decomposed:", len(dec.nodes()), "nodes -> re-fused:",
-      len(fused.nodes()), "nodes; recovered:", stats)
+# 6. Compile artifacts ride along as metadata: the memory plan (liveness
+#    arena) and the IR-level cost estimate.
+print("memory plan:", compiled.memory_plan.summary())
+print("cost: %.3g flops, %.3g bytes" % (compiled.cost.flops,
+                                        compiled.cost.bytes))

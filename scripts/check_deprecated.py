@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Guard: no in-repo call site may use the deprecated compile paths.
+
+The unified Backend API (repro.backend) is the only sanctioned way to
+compile IR.  The legacy shims live in src/repro/transformers/ for one
+release, for *external* snippets only.  This script fails CI if any file
+outside that package (or this script) still:
+
+  * calls ``get_transformer(...)``            (the deprecated entry), or
+  * reaches into ``emit_callable``/``EmitCtx`` (the raw emission internals).
+
+Usage: python scripts/check_deprecated.py  (exit 0 = clean)
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (pattern, description)
+BANNED = [
+    (re.compile(r"\bget_transformer\s*\("),
+     "get_transformer(...) — use repro.backend.Backend.create(...)"),
+    (re.compile(r"\bemit_callable\s*\("),
+     "emit_callable(...) — use Backend.compile(fn, "
+     "CompileOptions(static_jit=False)).raw"),
+    (re.compile(r"\bEmitCtx\s*\("),
+     "EmitCtx(...) — use CompileOptions"),
+]
+
+ALLOWED = {
+    os.path.join("src", "repro", "transformers", "base.py"),
+    os.path.join("src", "repro", "transformers", "jax_backend.py"),
+    os.path.join("src", "repro", "transformers", "interpreter.py"),
+    os.path.join("src", "repro", "transformers", "__init__.py"),
+    os.path.join("src", "repro", "backend", "jax_backend.py"),
+    os.path.join("scripts", "check_deprecated.py"),
+    # exercises the deprecation shim on purpose
+    os.path.join("tests", "test_backend_api.py"),
+}
+
+
+def main() -> int:
+    bad = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".pytest_cache",
+                                    "results", ".eggs")
+                       and not d.endswith(".egg-info")]
+        for fname in filenames:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, ROOT)
+            if rel in ALLOWED:
+                continue
+            with open(path, encoding="utf-8") as f:
+                for lineno, line in enumerate(f, 1):
+                    for pat, why in BANNED:
+                        if pat.search(line):
+                            bad.append(f"{rel}:{lineno}: {why}\n    {line.rstrip()}")
+    if bad:
+        print("deprecated compile-path usage found "
+              f"({len(bad)} site{'s' if len(bad) != 1 else ''}):\n")
+        print("\n".join(bad))
+        return 1
+    print("check_deprecated: clean — all compile paths go through "
+          "repro.backend")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,11 +22,11 @@ from repro.core import autodiff
 autodiff.set_attention_vjp(vjp)
 
 import jax
+from repro.backend import Backend, CompileOptions
 from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.models.lm import build_graphs
 from repro.models.train_graph import make_train_step
-from repro.transformers import get_transformer
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shardings import train_step_shardings, graph_shardings
 
@@ -34,7 +34,7 @@ cfg = get_config(arch)
 sh = SHAPES[shape]
 mesh = make_production_mesh()
 graphs = build_graphs(cfg, sh)
-jt = get_transformer("jax")
+backend = Backend.create("jax")
 if sh.kind == "train":
     ts = make_train_step(graphs, cfg)
     ins, outs, donate, rules = train_step_shardings(ts, mesh)
@@ -44,10 +44,11 @@ else:
     ins, rules = graph_shardings(graphs, mesh)
     fn = graphs.fn
     kw = dict(in_shardings=ins)
-jitted = jt.jit(fn, mode="pjit", mesh=mesh, axis_rules=rules, **kw)
+cf = backend.compile(fn, CompileOptions(mode="pjit", mesh=mesh,
+                                        axis_rules=rules, **kw))
 args = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in fn.in_types]
 with mesh:
-    compiled = jitted.lower(*args).compile()
+    compiled = cf.lower(*args).compile()
 mem = compiled.memory_analysis()
 print(f"temp={mem.temp_size_in_bytes/2**30:.1f}GiB "
       f"args={mem.argument_size_in_bytes/2**30:.1f}GiB "

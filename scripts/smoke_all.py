@@ -8,7 +8,7 @@ from repro.configs import get_config, ARCHS
 from repro.configs.base import ShapeConfig, supported_shapes
 from repro.models.lm import build_graphs
 from repro.models.train_graph import make_train_step, init_opt_state
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
 B, S = 2, 16
 SKV = 32
@@ -35,7 +35,7 @@ def data_for(cfg, kind, b):
 
 def run(arch):
     cfg = get_config(arch).reduced()
-    jt = get_transformer("jax")
+    backend = Backend.create("jax")
     for kind, seq in (("train", S), ("prefill", S), ("decode", SKV),
                       ("long_decode", SKV)):
         if kind == "long_decode" and not cfg.sub_quadratic:
@@ -47,7 +47,7 @@ def run(arch):
         if kind == "train":
             ts = make_train_step(g, cfg)
             m, v = init_opt_state(g.builder, cfg, params)
-            ex = jt.compile(ts.fn)
+            ex = backend.compile(ts.fn)
             args = data + [np.int32(0)] + \
                 [params[n] for n in ts.param_names] + \
                 [m[n] for n in ts.param_names] + [v[n] for n in ts.param_names]
@@ -57,7 +57,7 @@ def run(arch):
             print(f"  {arch:24s} {kind:12s} loss={loss:.4f} "
                   f"nodes={len(ts.fn.nodes())}")
         else:
-            ex = jt.compile(g.fn)
+            ex = backend.compile(g.fn)
             outs = ex(*(data + [params[n] for n in g.builder.param_names()]))
             for o in outs:
                 assert np.all(np.isfinite(np.asarray(o, np.float32))), \

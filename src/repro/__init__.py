@@ -1,11 +1,24 @@
 """repro: Intel nGraph (SysML'18) reproduced as a JAX/TPU compiler stack.
 
 Public API:
-    from repro import ng                  # functional IR frontend (ops)
+    from repro import ng                        # functional IR frontend (ops)
     from repro.core import Function
-    from repro.transformers import get_transformer
+    from repro.backend import Backend, CompileOptions   # unified compilation
+
+``repro.transformers.get_transformer`` is a deprecated one-release shim
+over ``repro.backend``.
 """
 from .core import ops as ng  # noqa: F401
 from .core import Function, Node, TensorType, Value  # noqa: F401
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_BACKEND_EXPORTS = ("Backend", "CompileOptions", "CompiledFunction",
+                    "available_backends")
+
+
+def __getattr__(name):  # lazy: importing repro must not pull in jax
+    if name in _BACKEND_EXPORTS:
+        from . import backend
+        return getattr(backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

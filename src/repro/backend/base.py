@@ -1,0 +1,156 @@
+"""Backend: the unified compilation entry point (paper sec. 4).
+
+``Backend.create("jax").compile(fn, CompileOptions(level="O2"))`` is the
+only sanctioned way to turn IR into something executable: the backend runs
+the pass pipeline itself (at its default level unless the options say
+otherwise), performs backend code generation, and memoizes the result in a
+per-backend cache keyed on the canonical graph signature plus the options —
+the serve/decode hot path compiles once per process, period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type
+
+from ..core.function import Function
+from ..core.passes import run_pipeline
+from .compiled import CompiledFunction
+from .options import CompileOptions
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int
+    misses: int
+    size: int
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class Backend:
+    """Base class: one instance per (backend name, backend opts).
+
+    Subclasses implement :meth:`_codegen` — everything else (pipeline,
+    cache, metadata attachment) is shared here.
+    """
+
+    name = "base"
+    default_level = "O1"
+
+    def __init__(self, **backend_opts):
+        self.backend_opts = backend_opts
+        self._cache: Dict[Tuple, CompiledFunction] = {}
+        self._inflight: Dict[Tuple, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- registry / construction --------------------------------------------
+    _REGISTRY: Dict[str, Type["Backend"]] = {}
+    _INSTANCES: Dict[Tuple, "Backend"] = {}
+
+    @classmethod
+    def register(cls, backend_cls: Type["Backend"]) -> Type["Backend"]:
+        cls._REGISTRY[backend_cls.name] = backend_cls
+        return backend_cls
+
+    @classmethod
+    def available(cls) -> List[str]:
+        return sorted(cls._REGISTRY)
+
+    @classmethod
+    def create(cls, name: str, *, fresh: bool = False,
+               **backend_opts) -> "Backend":
+        """Get the backend named ``name``.
+
+        Instances are memoized per (name, backend_opts) so every caller in
+        a process shares one compile cache; ``fresh=True`` bypasses the
+        memo (isolated cache + counters, e.g. for benchmarks)."""
+        if name not in cls._REGISTRY:
+            raise KeyError(
+                f"no backend {name!r}; available: {cls.available()}")
+        if fresh:
+            return cls._REGISTRY[name](**backend_opts)
+        key = (name, tuple(sorted(backend_opts.items())))
+        inst = cls._INSTANCES.get(key)
+        if inst is None:
+            inst = cls._INSTANCES[key] = cls._REGISTRY[name](**backend_opts)
+        return inst
+
+    # -- the one compile path ------------------------------------------------
+    def compile(self, fn: Function,
+                options: Optional[CompileOptions] = None) -> CompiledFunction:
+        """Optimize + codegen ``fn``; memoized on (graph signature, options).
+
+        The cache key is the canonical structural signature plus the
+        parameter names (named-parameter calling must keep working on a
+        hit), the *resolved* opt level, and the options.  Concurrent
+        compiles of the same key are deduplicated: one thread builds, the
+        rest wait and receive the same executable."""
+        if options is None:
+            options = CompileOptions()
+        if not isinstance(options, CompileOptions):
+            raise TypeError(
+                f"options must be CompileOptions, got {type(options).__name__}"
+                " — legacy **kwargs go through CompileOptions.from_kwargs()")
+        level = options.level or self.default_level
+        key = (fn.signature(), tuple(p.name for p in fn.parameters),
+               level, options.cache_key())
+        while True:
+            with self._lock:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    self.cache_hits += 1
+                    return hit
+                waiter = self._inflight.get(key)
+                if waiter is None:
+                    self._inflight[key] = threading.Event()
+                    break  # this thread builds
+            waiter.wait()  # another thread is building this key; retry
+        try:
+            opt_fn, report = run_pipeline(
+                fn, level, compress_grads=options.compress_grads)
+            call, raw, lower = self._codegen(opt_fn, options)
+            compiled = CompiledFunction(
+                opt_fn, call, backend=self.name, options=options,
+                report=report, signature=key[0], raw=raw, lower=lower)
+            with self._lock:
+                self.cache_misses += 1
+                self._cache[key] = compiled
+            return compiled
+        finally:
+            with self._lock:
+                self._inflight.pop(key).set()
+
+    def _codegen(self, fn: Function, options: CompileOptions
+                 ) -> Tuple[Callable, Optional[Callable], Optional[Callable]]:
+        """Backend code generation for an already-optimized graph.
+
+        Returns ``(call, raw, lower)``: ``call`` takes/returns numpy,
+        ``raw`` is the backend-native callable (or None to reuse ``call``),
+        ``lower`` is the AOT hook (or None if unsupported)."""
+        raise NotImplementedError
+
+    # -- cache introspection -------------------------------------------------
+    def cache_stats(self) -> CacheStats:
+        with self._lock:
+            return CacheStats(self.cache_hits, self.cache_misses,
+                              len(self._cache))
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.cache_hits = 0
+            self.cache_misses = 0
+
+
+def register_backend(backend_cls: Type[Backend]) -> Type[Backend]:
+    return Backend.register(backend_cls)
+
+
+def available_backends() -> List[str]:
+    return Backend.available()

@@ -1,0 +1,51 @@
+"""JAX/XLA backend: pipeline + IR emission + jit behind the Backend API.
+
+Code generation itself lives in :mod:`repro.transformers.jax_backend`
+(the emitter table); this module is the sanctioned entry that composes it
+with the pass pipeline, sharding options, and the compile cache.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from ..core.function import Function
+from ..transformers.jax_backend import EmitCtx, emit_callable
+from .base import Backend, register_backend
+from .options import CompileOptions
+
+
+@register_backend
+class JaxBackend(Backend):
+    """Compiles IR -> jitted XLA executable (optionally pjit-partitioned)."""
+
+    name = "jax"
+    default_level = "O1"
+
+    def _codegen(self, fn: Function, options: CompileOptions
+                 ) -> Tuple[Callable, Optional[Callable], Optional[Callable]]:
+        import jax
+
+        ctx = EmitCtx(mode=options.mode, mesh=options.mesh,
+                      use_pallas=options.use_pallas,
+                      remat_scan=options.remat_scan,
+                      interpret_pallas=options.interpret_pallas,
+                      attn_impl=options.attn_impl,
+                      attn_chunk=options.attn_chunk,
+                      axis_rules=options.axis_rules)
+        run = emit_callable(fn, ctx)
+        lower = None
+        if options.static_jit:
+            kw = {}
+            if options.in_shardings is not None:
+                kw["in_shardings"] = options.in_shardings
+            if options.out_shardings is not None:
+                kw["out_shardings"] = options.out_shardings
+            run = jax.jit(run, donate_argnums=options.donate_argnums, **kw)
+            lower = run.lower
+
+        def call(*args):
+            return [np.asarray(o) for o in run(*args)]
+
+        return call, run, lower

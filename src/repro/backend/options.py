@@ -1,0 +1,108 @@
+"""CompileOptions: the one declarative knob set for every backend.
+
+Everything that used to be scattered across legacy ``Transformer.compile``
+kwargs and the emitter context lives here as a frozen, validated dataclass.
+Options
+are part of the compile-cache key (see :meth:`CompileOptions.cache_key`), so
+two compiles of the same Function with the same options share an executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+_LEVELS = ("O0", "O1", "O2")
+_MODES = ("jit", "shardmap", "pjit")
+_ATTN_IMPLS = ("auto", "naive", "chunked")
+
+
+class OptionsError(ValueError):
+    """Raised for invalid CompileOptions field combinations."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Declarative compilation options, uniform across backends.
+
+    ``level=None`` means "use the backend's default level" (O1 for jax,
+    O0 for the interpreter).  Fields irrelevant to a backend are ignored by
+    it (e.g. ``arena`` on jax, ``mesh`` on the interpreter).
+    """
+
+    # pass pipeline
+    level: Optional[str] = None          # None | 'O0' | 'O1' | 'O2'
+    compress_grads: bool = False         # O2 extra: bf16 AllReduce wires
+
+    # jax emission / partitioning
+    mode: str = "jit"                    # 'jit' | 'shardmap' | 'pjit'
+    mesh: Any = None                     # jax Mesh (pjit mode)
+    axis_rules: Any = None               # logical axis -> mesh axes
+    use_pallas: bool = False             # compound ops as Pallas kernels
+    interpret_pallas: bool = True        # Pallas interpret mode (CPU-safe)
+    remat_scan: bool = False             # checkpoint scan bodies
+    attn_impl: str = "auto"              # 'auto' | 'naive' | 'chunked'
+    attn_chunk: int = 1024
+    static_jit: bool = True              # wrap emission in jax.jit
+    in_shardings: Any = None
+    out_shardings: Any = None
+    donate_argnums: Tuple[int, ...] = ()
+
+    # interpreter
+    arena: Any = None                    # MemoryPlan | True (plan one) | None
+
+    def __post_init__(self):
+        if self.level is not None and self.level not in _LEVELS:
+            raise OptionsError(
+                f"level must be one of {_LEVELS} or None, got {self.level!r}")
+        if self.mode not in _MODES:
+            raise OptionsError(
+                f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.attn_impl not in _ATTN_IMPLS:
+            raise OptionsError(
+                f"attn_impl must be one of {_ATTN_IMPLS}, "
+                f"got {self.attn_impl!r}")
+        if not isinstance(self.attn_chunk, int) or self.attn_chunk <= 0:
+            raise OptionsError(
+                f"attn_chunk must be a positive int, got {self.attn_chunk!r}")
+        if self.mode == "pjit" and self.mesh is None:
+            raise OptionsError("mode='pjit' requires a mesh")
+        if self.mode == "pjit" and not self.static_jit:
+            raise OptionsError("mode='pjit' requires static_jit=True")
+        try:
+            donate = tuple(int(i) for i in self.donate_argnums)
+        except TypeError:
+            raise OptionsError(
+                f"donate_argnums must be a sequence of ints, "
+                f"got {self.donate_argnums!r}") from None
+        object.__setattr__(self, "donate_argnums", donate)
+
+    # -- compile-cache keying ------------------------------------------------
+    def cache_key(self) -> Tuple:
+        """A hashable, collision-safe token for these options.
+
+        Primitive fields key by value; opaque objects (meshes, shardings,
+        memory plans) key by identity — a distinct object is a cache miss,
+        never a false hit.  ``level`` is excluded: the backend keys on the
+        *resolved* level, so ``level=None`` and an explicit
+        ``level=<backend default>`` share an executable."""
+        return tuple((f.name, _token(getattr(self, f.name)))
+                     for f in dataclasses.fields(self) if f.name != "level")
+
+    def replace(self, **changes) -> "CompileOptions":
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_kwargs(cls, **legacy) -> "CompileOptions":
+        """Build options from legacy ``Transformer.compile(**kwargs)`` names.
+
+        Unknown keys are ignored (the legacy API ignored them too)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in legacy.items() if k in known})
+
+
+def _token(v: Any):
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (tuple, list)):
+        return (type(v).__name__,) + tuple(_token(x) for x in v)
+    return ("obj", type(v).__name__, id(v))

@@ -166,3 +166,30 @@ def bridge_to_ir(
     grads = [g if g is not None else zeros_of(v.type) for g, v in zip(grads, wrt)]
     fn = Function(all_params, [loss_v] + grads, name="neon_train")
     return gb.apply_replacements(fn), names
+
+
+def compile_model(
+    model: Model,
+    input_shape: Sequence[int],
+    *,
+    input_dtype="f32",
+    loss: Optional[str] = None,
+    label_shape: Optional[Sequence[int]] = None,
+    with_grads: bool = False,
+    backend: str = "jax",
+    options=None,
+):
+    """Bridge ``model`` to IR and compile it on a named backend.
+
+    The neon-style one-call path the paper describes for framework users:
+    the bridge emits IR and hands it to the unified Backend API (pipeline,
+    kernel selection, and the compile cache all happen behind it).
+    Returns ``(compiled, param_order)`` where ``compiled`` is a
+    :class:`repro.backend.CompiledFunction`.
+    """
+    from ..backend import Backend, CompileOptions
+    fn, names = bridge_to_ir(model, input_shape, input_dtype=input_dtype,
+                             loss=loss, label_shape=label_shape,
+                             with_grads=with_grads)
+    compiled = Backend.create(backend).compile(fn, options or CompileOptions())
+    return compiled, names

@@ -78,6 +78,15 @@ class Function:
     def out_types(self) -> List[TensorType]:
         return [r.type for r in self.results]
 
+    def signature(self) -> str:
+        """Canonical structural hash (hex sha256) of this graph.
+
+        Independent of node/function names: two structurally-identical
+        rebuilt graphs share a signature.  Used as the backend compile-cache
+        key (see :mod:`repro.backend`)."""
+        from . import serialize  # local import: serialize imports this module
+        return serialize.signature(self)
+
     def op_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
         for n in self.nodes():

@@ -43,8 +43,19 @@ class ConstantFolding(Pass):
                 outs = EVAL[node.op](node, args)
             except Exception:
                 return None
+            # raw EVAL rules don't normalize shapes the way execution does
+            # (a () x (1,) broadcast yields (1,) for a ()-typed node): conform
+            # each folded value to its declared type or leave the node alone
+            arrs = []
+            for o, t in zip(outs, node.out_types):
+                arr = np.ascontiguousarray(np.asarray(o, dtype=t.dtype))
+                if arr.shape != t.shape:
+                    if arr.size != t.size:
+                        return None
+                    arr = arr.reshape(t.shape)
+                arrs.append(arr)
             stats["folded"] += 1
-            return [ops.constant(np.ascontiguousarray(o), dtype=t.dtype)
-                    for o, t in zip(outs, node.out_types)]
+            return [ops.constant(a, dtype=t.dtype)
+                    for a, t in zip(arrs, node.out_types)]
 
         return transform(fn, rule, name=fn.name), stats

@@ -8,6 +8,7 @@ format that a foreign frontend can produce and the bridge can import
 from __future__ import annotations
 
 import base64
+import hashlib
 import json
 from typing import Any, Dict, List
 
@@ -81,6 +82,58 @@ def _decode_function(doc: Dict) -> Function:
     params = [built[i] for i in doc["parameters"]]
     results = [Value(built[i], j) for i, j in doc["results"]]
     return Function(params, results, doc["name"])
+
+
+# ---------------------------------------------------------------------------
+# Canonical graph signature (compile-cache key).
+#
+# Unlike the JSON round-trip above, the signature is *structural*: node and
+# function names are dropped, attribute keys are sorted, and large constant
+# payloads are digested rather than base64-embedded, so two independently
+# rebuilt but structurally-identical graphs hash identically while any change
+# to an op, edge, attribute, dtype, or shape changes the hash.
+# ---------------------------------------------------------------------------
+
+def _sig_attr(v: Any):
+    if isinstance(v, np.ndarray):
+        return ("nd", dtype_name(v.dtype), tuple(v.shape),
+                hashlib.sha256(np.ascontiguousarray(v).tobytes()).hexdigest())
+    if isinstance(v, np.dtype):
+        return ("dt", dtype_name(v))
+    if isinstance(v, Function):
+        return ("fn", signature(v))
+    if isinstance(v, (tuple, list)):
+        return ("seq", type(v).__name__, tuple(_sig_attr(x) for x in v))
+    if isinstance(v, dict):
+        return ("map", tuple(sorted((str(k), _sig_attr(x))
+                                    for k, x in v.items())))
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        v = v.item()
+    # tag with the type name so 1, 1.0 and True stay distinct
+    return (type(v).__name__, repr(v))
+
+
+def signature(fn: Function) -> str:
+    """Stable structural hash of ``fn`` (hex sha256).
+
+    Built on the same canonical walk as serialization but independent of
+    node/function *names*: the key for the backend compile cache."""
+    nodes = fn.nodes()
+    idx = {id(n): i for i, n in enumerate(nodes)}
+    doc = (
+        "ngraph-sig-v1",
+        tuple((idx.get(id(p), -1),
+               tuple(p.out_types[0].shape), dtype_name(p.out_types[0].dtype))
+              for p in fn.parameters),
+        tuple((idx[id(r.node)], r.index) for r in fn.results),
+        tuple((n.op,
+               tuple((idx[id(v.node)], v.index) for v in n.inputs),
+               tuple(sorted((k, _sig_attr(v)) for k, v in n.attrs.items())),
+               tuple((tuple(t.shape), dtype_name(t.dtype))
+                     for t in n.out_types))
+              for n in nodes),
+    )
+    return hashlib.sha256(repr(doc).encode()).hexdigest()
 
 
 def dumps(fn: Function) -> str:

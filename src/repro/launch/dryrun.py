@@ -37,11 +37,11 @@ def _cell(arch: str, shape_name: str, multi_pod: bool, attn_impl: str = "auto",
     from ..core import autodiff
     autodiff.set_attention_vjp(attn_vjp)
 
+    from ..backend import Backend, CompileOptions
     from ..configs import get_config
     from ..configs.base import SHAPES, supported_shapes
     from ..models.lm import build_graphs
     from ..models.train_graph import make_train_step
-    from ..transformers import get_transformer
     from .mesh import make_production_mesh
     from .roofline import Roofline, model_flops_for, parse_collectives
     from .shardings import graph_shardings, train_step_shardings
@@ -66,7 +66,7 @@ def _cell(arch: str, shape_name: str, multi_pod: bool, attn_impl: str = "auto",
     mb = shape.global_batch // n_micro if shape.kind == "train" else \
         shape.global_batch
     graphs = build_graphs(cfg, shape, mb)
-    jt = get_transformer("jax")
+    backend = Backend.create("jax")
 
     if shape.kind == "train":
         ts = make_train_step(graphs, cfg, n_micro=n_micro)
@@ -79,17 +79,20 @@ def _cell(arch: str, shape_name: str, multi_pod: bool, attn_impl: str = "auto",
         fn = graphs.fn
         jit_kw = dict(in_shardings=ins)
 
-    jitted = jt.jit(fn, mode="pjit", mesh=mesh, axis_rules=rules,
-                    attn_impl=attn_impl, **jit_kw)
+    cf = backend.compile(fn, CompileOptions(
+        mode="pjit", mesh=mesh, axis_rules=rules, attn_impl=attn_impl,
+        **jit_kw))
     args = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in fn.in_types]
     with mesh:
-        lowered = jitted.lower(*args)
+        lowered = cf.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per module
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     census = parse_collectives(hlo, n_dev)
     peak_bytes = (getattr(mem, "argument_size_in_bytes", 0)

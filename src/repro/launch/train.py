@@ -40,6 +40,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     import jax
 
+    from ..backend import Backend, CompileOptions
     from ..configs import get_config
     from ..configs.base import ShapeConfig
     from ..models.lm import build_graphs
@@ -47,7 +48,6 @@ def main(argv: Optional[List[str]] = None) -> int:
     from ..runtime.checkpoint import AsyncCheckpointer, CheckpointManager
     from ..runtime.data import DataConfig, Prefetcher, SyntheticLM
     from ..runtime.fault import Heartbeat, StragglerDetector, retry_step
-    from ..transformers import get_transformer
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -59,11 +59,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     b = graphs.builder
     names = ts.param_names
 
-    jt = get_transformer("jax")
     n_data = len(b.inputs)
     n_p = len(names)
     donate = tuple(range(n_data + 1, n_data + 1 + 3 * n_p))
-    step_fn = jt.jit(ts.fn, donate_argnums=donate)
+    compiled = Backend.create("jax").compile(
+        ts.fn, CompileOptions(donate_argnums=donate))
+    step_fn = compiled.raw  # jax-native callable: donation honored, no copies
 
     # -- state: fresh or restored ------------------------------------------------
     mgr = CheckpointManager(args.ckpt_dir, keep=3)

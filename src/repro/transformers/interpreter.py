@@ -22,7 +22,7 @@ import numpy as np
 from ..core.function import Function
 from ..core.node import Node
 from ..core.types import as_dtype, is_float
-from .base import Executable, Transformer, register_transformer
+from .base import Transformer, register_transformer
 
 _erf = np.vectorize(math.erf, otypes=[np.float64])
 
@@ -468,11 +468,10 @@ def evaluate(fn: Function, inputs: List[np.ndarray],
 
 
 class InterpreterTransformer(Transformer):
-    name = "interpreter"
+    """Legacy handle for the interpreter backend; ``compile`` (inherited)
+    forwards to ``repro.backend.InterpreterBackend``."""
 
-    def compile(self, fn: Function, **options) -> Executable:
-        arena = options.get("arena")
-        return Executable(fn, lambda *a: evaluate(fn, list(a), arena=arena))
+    name = "interpreter"
 
 
 register_transformer(InterpreterTransformer())

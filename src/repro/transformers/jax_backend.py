@@ -26,7 +26,7 @@ from jax import lax
 from ..core.function import Function
 from ..core.node import Node
 from ..core.types import as_dtype, is_float
-from .base import Executable, Transformer, register_transformer
+from .base import Transformer, register_transformer
 
 EMIT: Dict[str, Callable] = {}
 
@@ -506,62 +506,10 @@ def emit_callable(fn: Function, ctx: Optional[EmitCtx] = None) -> Callable:
 
 
 class JaxTransformer(Transformer):
-    """Compiles IR -> jitted XLA executable (optionally pjit-partitioned)."""
+    """Legacy handle for the jax backend; ``compile`` (inherited) forwards
+    to ``repro.backend.JaxBackend`` — codegen itself lives above in EMIT."""
 
     name = "jax"
-
-    def compile(
-        self,
-        fn: Function,
-        *,
-        mode: str = "jit",
-        mesh=None,
-        in_shardings=None,
-        out_shardings=None,
-        donate_argnums: Sequence[int] = (),
-        use_pallas: bool = False,
-        remat_scan: bool = False,
-        interpret_pallas: bool = True,
-        static_jit: bool = True,
-        attn_impl: str = "auto",
-        attn_chunk: int = 1024,
-        axis_rules=None,
-        **_,
-    ) -> Executable:
-        ctx = EmitCtx(mode=mode, mesh=mesh, use_pallas=use_pallas,
-                      remat_scan=remat_scan, interpret_pallas=interpret_pallas,
-                      attn_impl=attn_impl, attn_chunk=attn_chunk,
-                      axis_rules=axis_rules)
-        run = emit_callable(fn, ctx)
-        if static_jit:
-            kw = {}
-            if in_shardings is not None:
-                kw["in_shardings"] = in_shardings
-            if out_shardings is not None:
-                kw["out_shardings"] = out_shardings
-            run = jax.jit(run, donate_argnums=tuple(donate_argnums), **kw)
-        return Executable(fn, lambda *a: [np.asarray(o) for o in run(*a)])
-
-    def jit(self, fn: Function, **options):
-        """Like compile() but returns the raw jitted callable (jax arrays)."""
-        ctx = EmitCtx(
-            mode=options.get("mode", "jit"),
-            mesh=options.get("mesh"),
-            use_pallas=options.get("use_pallas", False),
-            remat_scan=options.get("remat_scan", False),
-            interpret_pallas=options.get("interpret_pallas", True),
-            attn_impl=options.get("attn_impl", "auto"),
-            attn_chunk=options.get("attn_chunk", 1024),
-            axis_rules=options.get("axis_rules"),
-        )
-        run = emit_callable(fn, ctx)
-        kw = {}
-        if options.get("in_shardings") is not None:
-            kw["in_shardings"] = options["in_shardings"]
-        if options.get("out_shardings") is not None:
-            kw["out_shardings"] = options["out_shardings"]
-        return jax.jit(run, donate_argnums=tuple(options.get("donate_argnums", ())),
-                       **kw)
 
 
 register_transformer(JaxTransformer())

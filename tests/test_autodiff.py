@@ -8,8 +8,11 @@ import pytest
 from repro.core import ops
 from repro.core.autodiff import grad
 from repro.core.function import Function
-from repro.transformers import get_transformer
-from repro.transformers.jax_backend import emit_callable
+from repro.backend import Backend, CompileOptions
+
+JB = Backend.create("jax")
+# an unjitted O0 emission: the jax-traceable forward jax.grad differentiates
+TRACE = CompileOptions(level="O0", static_jit=False)
 
 RNG = np.random.default_rng(3)
 
@@ -17,11 +20,11 @@ RNG = np.random.default_rng(3)
 def check_grads(fn: Function, args, atol=1e-4):
     """IR-grad of fn vs jax.grad of the emitted forward callable."""
     gfn = grad(fn)
-    ex = get_transformer("jax").compile(gfn)
+    ex = JB.compile(gfn)
     outs = ex(*args)
     loss_ir, grads_ir = outs[0], outs[len(fn.results):]
 
-    fwd = emit_callable(fn)
+    fwd = JB.compile(fn, TRACE).raw
 
     def jloss(*a):
         return fwd(*a)[0]
@@ -67,12 +70,12 @@ def test_layernorm_softmax_xent():
     loss = ops.reduce_mean(ops.softmax_cross_entropy(h, lb.out()))
     fn = Function([x, w, b, lb], [loss])
     gfn = grad(fn, wrt=[0, 1, 2])
-    ex = get_transformer("jax").compile(gfn)
+    ex = JB.compile(gfn)
     args = [RNG.normal(size=(5, 8)).astype(np.float32),
             np.ones(8, np.float32), np.zeros(8, np.float32),
             np.array([1, 0, 7, 3, 3], np.int32)]
     outs = ex(*args)
-    fwd = emit_callable(fn)
+    fwd = JB.compile(fn, TRACE).raw
 
     def jloss(x, w, b):
         return fwd(x, w, b, args[3])[0]
@@ -173,7 +176,7 @@ def test_zero_grad_paths():
     x = _p((3,), name="x")
     y = ops.reduce_sum(ops.stop_gradient(x.out()) * x.out())
     gfn = grad(Function([x], [y]))
-    ex = get_transformer("jax").compile(gfn)
+    ex = JB.compile(gfn)
     arr = RNG.normal(size=(3,)).astype(np.float32)
     outs = ex(arr)
     np.testing.assert_allclose(outs[1], arr, atol=1e-6)  # d/dx (sg(x)*x) = sg(x)

@@ -1,0 +1,227 @@
+"""The unified Backend/CompiledFunction API: compile-cache behavior,
+signature stability, options validation, named-parameter calling, and the
+deprecation shim (acceptance criteria of the compilation-API redesign)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.backend import (Backend, CompileOptions, CompiledFunction,
+                           OptionsError, available_backends)
+from repro.core import ops
+from repro.core.function import Function
+
+RNG = np.random.default_rng(5)
+
+
+def _graph(scale=1.0):
+    x = ops.parameter((4, 16), "f32", "x")
+    w = ops.parameter((16,), "f32", "w")
+    y = ops.softmax(ops.rms_norm(ops.gelu(x.out() * scale), w.out()), -1)
+    return Function([x, w], [y])
+
+
+def _args():
+    return [RNG.normal(size=(4, 16)).astype(np.float32),
+            np.ones(16, np.float32)]
+
+
+def test_available_backends():
+    assert {"interpreter", "jax"} <= set(available_backends())
+    with pytest.raises(KeyError):
+        Backend.create("no-such-backend")
+
+
+def test_compile_runs_pipeline_and_attaches_report():
+    be = Backend.create("jax", fresh=True)
+    cf = be.compile(_graph(), CompileOptions(level="O2"))
+    assert isinstance(cf, CompiledFunction)
+    assert cf.report is not None and cf.report.nodes_after >= 1
+    # O2 ran real passes
+    assert [name for name, _ in cf.report.stats]
+    # metadata rides along
+    assert cf.memory_plan.arena_bytes >= 0
+    assert cf.cost.flops > 0
+
+
+def test_cache_hit_same_fn_same_options():
+    be = Backend.create("jax", fresh=True)
+    fn = _graph()
+    cf1 = be.compile(fn, CompileOptions(level="O2"))
+    cf2 = be.compile(fn, CompileOptions(level="O2"))
+    assert cf2 is cf1
+    st = be.cache_stats()
+    assert (st.hits, st.misses, st.size) == (1, 1, 1)
+
+
+def test_cache_hit_structurally_identical_rebuilt_graph():
+    be = Backend.create("jax", fresh=True)
+    cf1 = be.compile(_graph(), CompileOptions(level="O1"))
+    cf2 = be.compile(_graph(), CompileOptions(level="O1"))  # rebuilt
+    assert cf2 is cf1
+    assert be.cache_stats().hits == 1
+
+
+def test_cache_miss_on_changed_options_or_graph():
+    be = Backend.create("jax", fresh=True)
+    fn = _graph()
+    be.compile(fn, CompileOptions(level="O1"))
+    be.compile(fn, CompileOptions(level="O2"))          # options differ
+    be.compile(fn, CompileOptions(level="O1", attn_chunk=512))
+    be.compile(_graph(scale=2.0), CompileOptions(level="O1"))  # graph differs
+    st = be.cache_stats()
+    assert st.hits == 0 and st.misses == 4 and st.size == 4
+
+
+def test_cache_isolated_per_backend_and_clearable():
+    bj = Backend.create("jax", fresh=True)
+    bi = Backend.create("interpreter", fresh=True)
+    fn = _graph()
+    bj.compile(fn)
+    bi.compile(fn)
+    assert bj.cache_stats().misses == 1
+    assert bi.cache_stats().misses == 1
+    bj.clear_cache()
+    assert bj.cache_stats().size == 0
+    bj.compile(fn)
+    assert bj.cache_stats().misses == 1
+
+
+def test_create_memoizes_instances():
+    assert Backend.create("jax") is Backend.create("jax")
+    assert Backend.create("jax", fresh=True) is not Backend.create("jax")
+
+
+def test_signature_stable_across_rebuilds_and_names():
+    a = _graph()
+    b = _graph()
+    assert a.signature() == b.signature()
+    # node names don't matter, structure does
+    x = ops.parameter((4, 16), "f32", "totally_different")
+    w = ops.parameter((16,), "f32", "also_different")
+    c = Function([x, w],
+                 [ops.softmax(ops.rms_norm(ops.gelu(x.out() * 1.0), w.out()),
+                              -1)], name="other_name")
+    assert c.signature() == a.signature()
+    assert a.signature() != _graph(scale=3.0).signature()
+
+
+def test_signature_sensitive_to_attrs_dtype_shape():
+    x = ops.parameter((4, 16), "f32", "x")
+    s1 = Function([x], [ops.softmax(x.out(), -1)]).signature()
+    x2 = ops.parameter((4, 16), "f32", "x")
+    s2 = Function([x2], [ops.softmax(x2.out(), 0)]).signature()  # axis attr
+    assert s1 != s2
+    x3 = ops.parameter((4, 16), "bf16", "x")
+    s3 = Function([x3], [ops.softmax(x3.out(), -1)]).signature()
+    assert s1 != s3
+
+
+def test_options_validation_errors():
+    with pytest.raises(OptionsError):
+        CompileOptions(level="O9")
+    with pytest.raises(OptionsError):
+        CompileOptions(mode="warp")
+    with pytest.raises(OptionsError):
+        CompileOptions(attn_impl="flash5")
+    with pytest.raises(OptionsError):
+        CompileOptions(attn_chunk=0)
+    with pytest.raises(OptionsError):
+        CompileOptions(mode="pjit")  # no mesh
+    with pytest.raises(OptionsError):
+        CompileOptions(donate_argnums=object())
+    with pytest.raises(TypeError):
+        Backend.create("jax", fresh=True).compile(_graph(), {"level": "O2"})
+
+
+def test_named_parameter_calling():
+    fn = _graph()
+    cf = Backend.create("interpreter", fresh=True).compile(fn)
+    xa, wa = _args()
+    ref = cf(xa, wa)[0]
+    np.testing.assert_allclose(cf(x=xa, w=wa)[0], ref)
+    np.testing.assert_allclose(cf(w=wa, x=xa)[0], ref)
+    np.testing.assert_allclose(cf(xa, w=wa)[0], ref)
+    with pytest.raises(TypeError):
+        cf(xa, x=xa, w=wa)           # duplicate
+    with pytest.raises(TypeError):
+        cf(x=xa)                     # missing
+    with pytest.raises(TypeError):
+        cf(x=xa, w=wa, bogus=xa)     # unknown
+    with pytest.raises(TypeError):
+        cf(xa)                       # too few positional
+
+
+def test_warmup_and_timing_hook():
+    cf = Backend.create("jax", fresh=True).compile(_graph())
+    seen = []
+    hook = lambda c, s: seen.append((c, s))  # noqa: E731
+    cf.add_timing_hook(hook)
+    cf.warmup()
+    assert cf.n_calls == 1 and cf.last_seconds is not None
+    assert seen and seen[0][0] is cf and seen[0][1] > 0
+    cf.remove_timing_hook(hook)
+    cf.warmup()
+    assert len(seen) == 1  # removed hooks stop firing
+
+
+def test_cache_key_includes_param_names_and_resolved_level():
+    """A renamed-but-structurally-identical graph must NOT be a cache hit
+    (the executable binds named parameters), while level=None vs an
+    explicit backend-default level must share one executable."""
+    be = Backend.create("interpreter", fresh=True)
+    fn = _graph()
+    cf1 = be.compile(fn)                               # level resolves to O0
+    cf2 = be.compile(fn, CompileOptions(level="O0"))   # explicit default
+    assert cf2 is cf1
+    x = ops.parameter((4, 16), "f32", "inp")
+    w = ops.parameter((16,), "f32", "gain")
+    renamed = Function([x, w],
+                       [ops.softmax(ops.rms_norm(ops.gelu(x.out() * 1.0),
+                                                 w.out()), -1)])
+    assert renamed.signature() == fn.signature()       # structural identity
+    cf3 = be.compile(renamed)                          # but names differ
+    assert cf3 is not cf1
+    xa, wa = _args()
+    np.testing.assert_allclose(cf3(inp=xa, gain=wa)[0], cf1(x=xa, w=wa)[0])
+
+
+def test_concurrent_compiles_deduplicate():
+    import threading
+    be = Backend.create("interpreter", fresh=True)
+    fn = _graph()
+    results = []
+
+    def worker():
+        results.append(be.compile(fn))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 8
+    assert all(r is results[0] for r in results)
+    st = be.cache_stats()
+    assert st.misses == 1 and st.size == 1 and st.hits == 7
+
+
+def test_backends_agree_through_new_api():
+    fn = _graph()
+    args = _args()
+    a = Backend.create("interpreter", fresh=True).compile(fn)(*args)[0]
+    b = Backend.create("jax", fresh=True).compile(
+        fn, CompileOptions(level="O2"))(*args)[0]
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)
+
+
+def test_legacy_shim_warns_and_forwards():
+    from repro.transformers import get_transformer
+    fn = _graph()
+    args = _args()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ex = get_transformer("jax").compile(fn)
+        assert any(issubclass(r.category, DeprecationWarning) for r in rec)
+    ref = Backend.create("jax", fresh=True).compile(fn)(*args)[0]
+    np.testing.assert_allclose(ex(*args)[0], ref, atol=1e-5, rtol=1e-4)

@@ -5,14 +5,14 @@ import pytest
 
 from repro.core import ops
 from repro.core.function import Function
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
 RNG = np.random.default_rng(7)
 
 
 def both(fn, *args, atol=1e-5):
-    it = get_transformer("interpreter").compile(fn)
-    jt = get_transformer("jax").compile(fn)
+    it = Backend.create("interpreter").compile(fn)
+    jt = Backend.create("jax").compile(fn)
     a = it(*args)
     b = jt(*args)
     assert len(a) == len(b)

@@ -6,7 +6,7 @@ import numpy as np
 from repro.bridges import neon, onnx_like
 from repro.core import ops, serialize
 from repro.core.function import Function
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
 RNG = np.random.default_rng(2)
 
@@ -34,9 +34,9 @@ def test_neon_bridge_matches_functional():
     x = RNG.normal(size=(4, 8)).astype(np.float32)
     args1 = [x] + [model.param_values[n] for n in names]
     for backend in ("interpreter", "jax"):
-        t = get_transformer(backend)
-        y1 = t.compile(fn)(*args1)[0]
-        y2 = t.compile(fn2)(x)[0]
+        be = Backend.create(backend)
+        y1 = be.compile(fn)(*args1)[0]
+        y2 = be.compile(fn2)(x)[0]
         np.testing.assert_allclose(y1, y2, atol=1e-5)
 
 
@@ -46,7 +46,7 @@ def test_neon_training_via_ir_autodiff():
     model = neon.Model(net)
     fn, names = neon.bridge_to_ir(model, (16, 6), loss="softmax_xent",
                                   label_shape=(16,), with_grads=True)
-    ex = get_transformer("jax").compile(fn)
+    ex = Backend.create("jax").compile(fn)
     x = RNG.normal(size=(16, 6)).astype(np.float32)
     labels = RNG.integers(0, 5, size=(16,)).astype(np.int32)
     params = {n: model.param_values[n].copy() for n in names}
@@ -71,8 +71,8 @@ def test_serialization_roundtrip_is_same_ir():
     assert [t.shape for t in fn2.out_types] == [t.shape for t in fn.out_types]
     args = [RNG.normal(size=(3, 4)).astype(np.float32),
             RNG.normal(size=(4,)).astype(np.float32)]
-    a = get_transformer("interpreter").compile(fn)(*args)
-    b = get_transformer("jax").compile(fn2)(*args)
+    a = Backend.create("interpreter").compile(fn)(*args)
+    b = Backend.create("jax").compile(fn2)(*args)
     for u, v in zip(a, b):
         np.testing.assert_allclose(u, v, atol=1e-5)
 
@@ -88,6 +88,6 @@ def test_serialize_scan():
     fn2 = serialize.loads(serialize.dumps(fn))
     args = [RNG.normal(size=(2,)).astype(np.float32),
             RNG.normal(size=(4, 2)).astype(np.float32)]
-    a = get_transformer("interpreter").compile(fn)(*args)
-    b = get_transformer("interpreter").compile(fn2)(*args)
+    a = Backend.create("interpreter").compile(fn)(*args)
+    b = Backend.create("interpreter").compile(fn2)(*args)
     np.testing.assert_allclose(a[0], b[0], atol=1e-6)

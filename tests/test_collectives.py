@@ -18,7 +18,7 @@ SCRIPT = textwrap.dedent("""
 
     from repro.core import ops
     from repro.core.function import Function
-    from repro.transformers.jax_backend import emit_callable, EmitCtx
+    from repro.backend import Backend, CompileOptions
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
 
@@ -31,7 +31,8 @@ SCRIPT = textwrap.dedent("""
     y_pp = ops.send_recv(x.out(), "data", shift=1, axis_size=4)
     fn = Function([x], [y_ar, y_ag, y_rs, y_pp])
 
-    run = emit_callable(fn, EmitCtx(mode="shardmap"))
+    run = Backend.create("jax").compile(
+        fn, CompileOptions(mode="shardmap", static_jit=False, level="O0")).raw
     sharded = shard_map(lambda a: tuple(run(a)), mesh=mesh,
                         in_specs=P("data", None),
                         out_specs=(P(None, None), P(None, None),

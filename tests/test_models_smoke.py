@@ -8,7 +8,7 @@ from repro.configs import ARCHS, get_config
 from repro.configs.base import ShapeConfig
 from repro.models.lm import build_graphs
 from repro.models.train_graph import init_opt_state, make_train_step
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
 B, S, SKV = 2, 16, 32
 
@@ -36,7 +36,7 @@ def test_train_step(arch):
     ts = make_train_step(g, cfg)
     params = g.builder.init_params(0)
     m, v = init_opt_state(g.builder, cfg, params)
-    ex = get_transformer("jax").compile(ts.fn)
+    ex = Backend.create("jax").compile(ts.fn)
     rng = np.random.default_rng(0)
     args = _data(cfg, g.builder, rng) + [np.int32(0)] + \
         [params[n] for n in ts.param_names] + \
@@ -55,7 +55,7 @@ def test_train_step(arch):
 def test_forward_shapes(arch):
     cfg = get_config(arch).reduced()
     rng = np.random.default_rng(1)
-    jt = get_transformer("jax")
+    jt = Backend.create("jax")
     for kind, seq in (("prefill", S), ("decode", SKV)):
         g = build_graphs(cfg, ShapeConfig(kind, kind, seq, B), B)
         params = g.builder.init_params(0)

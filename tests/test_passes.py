@@ -9,13 +9,13 @@ from repro.core.function import Function
 from repro.core.passes import (CSE, DCE, AlgebraicSimplify, CompressAllReduce,
                                ConstantFolding, Decompose, FuseCompounds,
                                LayoutAssignment, plan_memory, run_pipeline)
-from repro.transformers import get_transformer
+from repro.backend import Backend, CompileOptions
 
 RNG = np.random.default_rng(11)
 
 
 def run_both(fn, *args):
-    return get_transformer("interpreter").compile(fn)(*args)
+    return Backend.create("interpreter").compile(fn)(*args)
 
 
 def test_constant_folding():
@@ -118,8 +118,9 @@ def test_memory_plan_reuse_and_arena_execution():
     assert plan.reuse_fraction > 0.5  # chain of temps collapses to ~2 buffers
     assert plan.arena_bytes >= plan.peak_live_bytes
     arr = RNG.normal(size=(64, 64)).astype(np.float32)
-    plain = get_transformer("interpreter").compile(fn)(arr)
-    arena = get_transformer("interpreter").compile(fn, arena=plan)(arr)
+    plain = Backend.create("interpreter").compile(fn)(arr)
+    arena = Backend.create("interpreter").compile(
+        fn, CompileOptions(arena=plan))(arr)
     np.testing.assert_allclose(plain[0], arena[0], rtol=1e-6)
 
 

@@ -1,6 +1,9 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ops, serialize
 from repro.core.autodiff import grad
@@ -8,10 +11,10 @@ from repro.core.cost import function_cost
 from repro.core.function import Function
 from repro.core.passes import CSE, DCE, ConstantFolding, plan_memory
 from repro.core.passes.liveness import liveness_intervals
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
-IT = get_transformer("interpreter")
-JT = get_transformer("jax")
+IT = Backend.create("interpreter")
+JT = Backend.create("jax")
 
 
 @st.composite

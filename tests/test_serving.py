@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.models.lm import build_graphs
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
 
 @pytest.mark.parametrize("arch", ["deepseek-7b", "qwen1.5-110b",
@@ -16,7 +16,7 @@ def test_decode_matches_prefill(arch):
     cfg = get_config(arch).reduced()
     B, P = 2, 12
     rng = np.random.default_rng(0)
-    jt = get_transformer("jax")
+    jt = Backend.create("jax")
 
     pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
     params = pre.builder.init_params(0)
@@ -55,7 +55,7 @@ def test_mla_latent_decode_matches_prefill():
     cfg = get_config("deepseek-v3-671b").reduced()
     B, P = 2, 8
     rng = np.random.default_rng(0)
-    jt = get_transformer("jax")
+    jt = Backend.create("jax")
     pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
     params = pre.builder.init_params(0)
     prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
@@ -87,7 +87,7 @@ def test_ring_buffer_swa_decode():
     W = cfg.window
     total = 3 * W  # decode well past the window
     rng = np.random.default_rng(1)
-    jt = get_transformer("jax")
+    jt = Backend.create("jax")
 
     full = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
     ring = build_graphs(cfg, ShapeConfig("long", "long_decode", total, B), B)

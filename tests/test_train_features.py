@@ -13,9 +13,9 @@ from repro.core.passes import CompressAllReduce
 from repro.models.lm import build_graphs
 from repro.models.train_graph import (init_opt_state, lr_schedule,
                                       make_train_step)
-from repro.transformers import get_transformer
+from repro.backend import Backend
 
-JT = get_transformer("jax")
+JT = Backend.create("jax")
 
 
 def _run_step(ts, params, m, v, toks, lbls, step=0):
@@ -110,7 +110,7 @@ def test_shardmap_dp_with_grad_compression():
         from repro.core.autodiff import GradBuilder
         from repro.core.function import Function
         from repro.core.passes import CompressAllReduce
-        from repro.transformers.jax_backend import emit_callable, EmitCtx
+        from repro.backend import Backend, CompileOptions
 
         # per-device forward: local batch 4, then AllReduce(mean) grads
         x = ops.parameter((4, 8), "f32", "x")
@@ -124,7 +124,9 @@ def test_shardmap_dp_with_grad_compression():
         fn = Function([x, w], [loss, gw])
         comp, stats = CompressAllReduce(wire_dtype="bf16").run(fn)
 
-        run = emit_callable(fn, EmitCtx(mode="shardmap"))
+        run = Backend.create("jax").compile(
+            fn, CompileOptions(mode="shardmap", static_jit=False,
+                               level="O0")).raw
         mesh = jax.make_mesh((8,), ("data",))
         f = shard_map(lambda a, b: tuple(run(a, b)), mesh=mesh,
                       in_specs=(P("data", None), P(None, None)),

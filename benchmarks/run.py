@@ -9,9 +9,13 @@
   E7 collectives  — gradient-compression pass wire-byte savings
   E8 scaling      — dry-run roofline table (reads results/dryrun/*.json)
   E9 compile_cache— Backend compile cache: cold vs cached decode compile
+  E10 serving     — ServeEngine tok/s + per-token latency: lockstep vs
+                    donated device-resident vs continuous batching
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
-diffing across commits.  ``python -m benchmarks.run [section ...]``
+diffing across commits; rows also accumulate in ``ROWS`` so
+``scripts/bench_to_json.py`` can snapshot a section to JSON.
+``python -m benchmarks.run [section ...]``
 """
 from __future__ import annotations
 
@@ -24,18 +28,31 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+ROWS = []  # (section, name, value, unit) as emitted, for JSON snapshots
+
 
 def emit(section: str, name: str, value, unit: str = ""):
     if isinstance(value, float):
         value = f"{value:.6g}"
+    ROWS.append({"section": section, "name": name, "value": str(value),
+                 "unit": unit})
     print(f"{section},{name},{value},{unit}", flush=True)
 
 
 def _timeit(f, n=5):
-    f()  # warmup / compile
+    """Average seconds per call, synchronizing async jax dispatch.
+
+    ``.raw`` callables return device arrays the moment XLA *enqueues* the
+    work; without ``block_until_ready`` on the result we would time the
+    dispatch, not the device, and under-report."""
+    import jax
+
+    jax.block_until_ready(f())  # warmup / compile
     t0 = time.perf_counter()
+    r = None
     for _ in range(n):
-        f()
+        r = f()
+    jax.block_until_ready(r)  # same device stream: syncs all n calls
     return (time.perf_counter() - t0) / n
 
 
@@ -270,6 +287,77 @@ def bench_compile_cache():
     emit("E9_compile_cache", "misses", st.misses, "")
 
 
+def bench_serving():
+    """E10: the serving hot loop — lockstep host-round-trip baseline vs
+    donated device-resident decode vs continuous batching (ServeEngine).
+
+    ``*_decode_tok_s`` is the steady-state hot loop (the paper-relevant
+    number: memory management sealed inside the backend executable);
+    ``*_tok_s`` is end-to-end including prefill.  A throwaway run per
+    mode warms the XLA executables so no mode pays compile time.
+
+    Latency semantics: lockstep/continuous p50/p95 are real per-dispatch
+    step durations; donated fuses the whole generation into one dispatch,
+    so its p50/p95 is the time-to-token of that chunk — donated trades
+    tail latency for throughput, and the rows show exactly that."""
+    from repro.configs import get_config
+    from repro.launch.engine import ServeEngine
+
+    cfg = get_config("deepseek-7b").reduced()
+    SLOTS, P, G = 4, 16, 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=(P,)) for _ in range(SLOTS)]
+
+    def run_mode(mode, n_req=SLOTS, warm=False):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=P + G, mode=mode, seed=0)
+        for i in range(n_req):
+            eng.submit(prompts[i % SLOTS], G)
+        rep = eng.run()
+        if warm:
+            return rep
+        emit("E10_serving", f"{mode}_tok_s", rep.tok_s, "tok/s")
+        emit("E10_serving", f"{mode}_decode_tok_s", rep.decode_tok_s, "tok/s")
+        emit("E10_serving", f"{mode}_p50_ms", rep.p50_ms, "ms")
+        emit("E10_serving", f"{mode}_p95_ms", rep.p95_ms, "ms")
+        return rep
+
+    reps = {}
+    for mode in ("lockstep", "donated", "continuous"):
+        run_mode(mode, warm=True)  # compile + XLA warm
+        reps[mode] = run_mode(mode)
+    base = reps["lockstep"].results
+    agree = all(np.array_equal(base[r], reps["donated"].results[r])
+                for r in base)
+    emit("E10_serving", "donated_matches_lockstep", int(agree), "bool")
+    # continuous-batching isolation: each request's output must match a
+    # run where it is alone in the engine (slot sharing leaks nothing)
+    alone_ok = True
+    for i in range(SLOTS):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=P + G,
+                          mode="continuous", seed=0)
+        rid = eng.submit(prompts[i], G)
+        alone_ok &= np.array_equal(eng.run().results[rid],
+                                   reps["continuous"].results[i])
+    emit("E10_serving", "continuous_matches_alone", int(alone_ok), "bool")
+    emit("E10_serving", "donated_speedup_x",
+         reps["donated"].decode_tok_s
+         / max(reps["lockstep"].decode_tok_s, 1e-9), "x")
+    emit("E10_serving", "continuous_speedup_x",
+         reps["continuous"].decode_tok_s
+         / max(reps["lockstep"].decode_tok_s, 1e-9), "x")
+    # continuous batching under oversubscription: 8 requests on 4 slots
+    rep8 = run_mode("continuous", n_req=8, warm=True)
+    emit("E10_serving", "continuous_8on4_tok_s", rep8.tok_s, "tok/s")
+    emit("E10_serving", "continuous_8on4_decode_tok_s", rep8.decode_tok_s,
+         "tok/s")
+    emit("E10_serving", "continuous_8on4_late_admissions",
+         rep8.late_admissions, "reqs")
+    p = rep8.pool
+    emit("E10_serving", "kv_pool_bytes_per_slot", p.bytes_per_slot, "B")
+    emit("E10_serving", "kv_pool_allocs", p.allocs, "")
+    emit("E10_serving", "kv_pool_peak_active", p.peak_active, "slots")
+
+
 def bench_scaling():
     """The dry-run roofline table (claim E8 / deliverable g)."""
     base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -328,6 +416,7 @@ SECTIONS = {
     "compounding": bench_compounding,
     "collectives": bench_collectives,
     "compile_cache": bench_compile_cache,
+    "serving": bench_serving,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,
 }

@@ -1,0 +1,112 @@
+"""Snapshot benchmark sections to a committed JSON file.
+
+``python scripts/bench_to_json.py --sections serving --out BENCH_serve.json``
+runs the named ``benchmarks.run`` sections and writes their rows as JSON,
+so the perf trajectory is tracked in-repo across PRs.
+
+``python scripts/bench_to_json.py --check BENCH_serve.json`` validates a
+committed snapshot's format without running anything (used by CI): the
+schema must parse, the serving section must contain lockstep/donated/
+continuous tok/s rows with positive values, and the donated speedup row
+must be present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_VERSION = 1
+REQUIRED_SERVING_ROWS = (
+    "lockstep_tok_s", "lockstep_decode_tok_s",
+    "donated_tok_s", "donated_decode_tok_s",
+    "continuous_tok_s", "continuous_decode_tok_s",
+    "donated_speedup_x",
+)
+
+
+def snapshot(sections, out_path: str) -> dict:
+    sys.path.insert(0, REPO)
+    from benchmarks import run as bench
+
+    bench.ROWS.clear()
+    for name in sections:
+        bench.SECTIONS[name]()
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "sections": list(sections),
+        "commit": _git_rev(),
+        "rows": list(bench.ROWS),
+    }
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out_path}: {len(doc['rows'])} rows "
+          f"from sections {sections}")
+    return doc
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+            text=True).strip()
+    except Exception:
+        return "unknown"
+
+
+def check(path: str) -> int:
+    with open(path) as fh:
+        doc = json.load(fh)
+    errors = []
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"schema_version != {SCHEMA_VERSION}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows must be a non-empty list")
+        rows = []
+    by_name = {}
+    for r in rows:
+        missing = {"section", "name", "value", "unit"} - set(r)
+        if missing:
+            errors.append(f"row {r} missing keys {sorted(missing)}")
+            continue
+        by_name[(r["section"], r["name"])] = r["value"]
+    if "serving" in doc.get("sections", []):
+        for name in REQUIRED_SERVING_ROWS:
+            v = by_name.get(("E10_serving", name))
+            if v is None:
+                errors.append(f"serving row missing: {name}")
+            else:
+                try:
+                    if float(v) <= 0:
+                        errors.append(f"serving row {name} not positive: {v}")
+                except ValueError:
+                    errors.append(f"serving row {name} not numeric: {v}")
+    if errors:
+        for e in errors:
+            print(f"CHECK FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"{path}: ok ({len(rows)} rows, commit {doc.get('commit')})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", nargs="+", default=["serving"])
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
+    ap.add_argument("--check", metavar="FILE",
+                    help="validate an existing snapshot instead of running")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(args.check)
+    snapshot(args.sections, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

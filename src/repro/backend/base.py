@@ -16,7 +16,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Type
 from ..core.function import Function
 from ..core.passes import run_pipeline
 from .compiled import CompiledFunction
-from .options import CompileOptions
+from .options import CompileOptions, OptionsError
 
 
 @dataclasses.dataclass
@@ -97,6 +97,13 @@ class Backend:
             raise TypeError(
                 f"options must be CompileOptions, got {type(options).__name__}"
                 " — legacy **kwargs go through CompileOptions.from_kwargs()")
+        n_params = len(fn.parameters)
+        bad = [i for i in options.donate_argnums
+               if not 0 <= i < n_params]
+        if bad:
+            raise OptionsError(
+                f"donate_argnums {bad} out of range for {fn.name} "
+                f"({n_params} parameters)")
         level = options.level or self.default_level
         key = (fn.signature(), tuple(p.name for p in fn.parameters),
                level, options.cache_key())

@@ -121,7 +121,16 @@ class CompiledFunction:
         return self._lower(*args)
 
     def warmup(self) -> "CompiledFunction":
-        """Trigger backend compilation with zero-filled inputs."""
+        """Trigger backend compilation with zero-filled inputs.
+
+        Donation-safe: the zero buffers are freshly allocated here on
+        every call — never the caller's arrays — so warming an executable
+        compiled with ``donate_argnums`` can only invalidate its own
+        temporaries.  The warmup goes through ``__call__`` (numpy
+        convention), which device-puts fresh backend buffers per call, so
+        a warmed donated executable serves subsequent real calls
+        normally; serving engines may warm before entering a
+        donation-honoring ``.raw`` hot loop."""
         self(*[np.zeros(t.shape, t.dtype) for t in self.function.in_types])
         return self
 

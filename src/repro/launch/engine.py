@@ -1,0 +1,562 @@
+"""ServeEngine: the device-resident serving hot loop.
+
+The decode loop runs on ``CompiledFunction.raw`` with every KV cache
+donated, so caches live as backend-native (jax) arrays for the whole
+generation — the per-step host round-trip of the old driver is gone and
+only token ids (or B x vocab logits in ``donated`` mode) cross the
+boundary.  Three modes, worst to best:
+
+  * ``lockstep``   — the legacy driver: numpy in/out every step, all
+                     requests start together (the benchmark baseline).
+  * ``donated``    — same lockstep schedule, but the caches stay on
+                     device, donated back to XLA, and the whole greedy
+                     loop (argmax + token feedback included) runs inside
+                     one fused multi-step executable
+                     (``models.lm.build_dense_chunk``) — a single
+                     dispatch generates the full continuation,
+                     token-for-token identical to ``lockstep``.
+  * ``continuous`` — continuous batching on the ``serve`` graph (per-row
+                     position vector, in-graph greedy sampling): finished
+                     requests free their KV pool slot and queued prompts
+                     are admitted mid-flight by prefilling into the freed
+                     cache rows.
+
+Donation invariants (see ROADMAP "Serving engine (PR 2)"):
+  * the engine is the only owner of the pool buffers; after each raw
+    call the donated inputs are invalid and the pool is repointed at the
+    step's outputs (``KVCachePool.update``);
+  * admission writes (``.at[...].set`` == DynamicUpdateSlice) produce a
+    fresh buffer, so they compose with donation;
+  * ``CompiledFunction.warmup()`` allocates its own zero buffers and is
+    therefore safe to call on a donated executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..backend import Backend, CompileOptions
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.lm import ModelGraphs, build_graphs
+
+MODES = ("lockstep", "donated", "continuous")
+_NON_CACHE_INPUTS = ("token", "pos")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request tracked by the engine."""
+
+    rid: int
+    prompt: np.ndarray          # (P,) i32
+    max_new: int                # tokens to generate (incl. the prefill one)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None  # pool slot while active
+    pos: int = 0                # next cache write position
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+
+@dataclasses.dataclass
+class PoolStats:
+    slots: int
+    active: int
+    bytes_per_slot: int
+    total_bytes: int
+    occupancy: float
+    allocs: int
+    frees: int
+    peak_active: int
+    decode_arena_bytes: int  # compiled step's planned intermediate arena
+
+
+class KVCachePool:
+    """Slot-addressed, device-resident KV cache pool.
+
+    One jax buffer per decode cache input, shaped from the compiled serve
+    function's input types; the slot dimension is the input spec's
+    ``batch`` axis.  Buffers are allocated once and *reused* across
+    requests: admission overwrites a freed slot's prefix rows (a
+    DynamicUpdateSlice via ``.at[...].set``) instead of re-zeroing the
+    pool, and under donation the engine repoints the pool at each step's
+    outputs via :meth:`update`.
+    """
+
+    def __init__(self, names: Sequence[str], types: Sequence,
+                 specs: Sequence[Tuple], arena_bytes: int = 0):
+        import jax.numpy as jnp
+
+        self.names = list(names)
+        self.types = list(types)
+        self.batch_dims = []
+        self.seq_dims = []
+        for sp in specs:
+            sp = tuple(sp)
+            self.batch_dims.append(sp.index("batch") if "batch" in sp else 1)
+            self.seq_dims.append(sp.index("kv_seq") if "kv_seq" in sp else None)
+        self.buffers = [jnp.zeros(t.shape, np.dtype(t.dtype)) for t in self.types]
+        self.slots = self.types[0].shape[self.batch_dims[0]]
+        self._free = list(range(self.slots - 1, -1, -1))
+        self.allocs = 0
+        self.frees = 0
+        self.peak_active = 0
+        self.total_bytes = sum(t.nbytes for t in self.types)
+        self.bytes_per_slot = self.total_bytes // max(self.slots, 1)
+        self.decode_arena_bytes = int(arena_bytes)
+
+    @property
+    def active(self) -> int:
+        return self.slots - len(self._free)
+
+    @property
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV pool exhausted")
+        slot = self._free.pop()
+        self.allocs += 1
+        self.peak_active = max(self.peak_active, self.active)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot in self._free or not 0 <= slot < self.slots:
+            raise ValueError(f"bad slot {slot}")
+        self._free.append(slot)
+        self.frees += 1
+
+    def write_prefix(self, slot: int, name: str, prefix) -> None:
+        """Write a (batch=1) prefill cache into ``slot``'s prefix rows."""
+        i = self.names.index(name)
+        buf = self.buffers[i]
+        bd, sd = self.batch_dims[i], self.seq_dims[i]
+        idx = [slice(None)] * buf.ndim
+        idx[bd] = slot
+        upd = prefix
+        # drop the prefill batch dim (always size 1 at the slot axis)
+        upd_idx = [slice(None)] * upd.ndim
+        upd_idx[bd] = 0
+        upd = upd[tuple(upd_idx)]
+        if sd is not None:
+            # update's seq axis shifted down one because bd was dropped
+            idx[sd] = slice(0, upd.shape[sd - 1 if sd > bd else sd])
+        self.buffers[i] = buf.at[tuple(idx)].set(upd)
+
+    def update(self, new_buffers: Sequence) -> None:
+        """Repoint the pool at a donated step's outputs (old buffers are
+        invalid the moment the raw call consumed them)."""
+        assert len(new_buffers) == len(self.buffers)
+        self.buffers = list(new_buffers)
+
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            slots=self.slots, active=self.active,
+            bytes_per_slot=self.bytes_per_slot, total_bytes=self.total_bytes,
+            occupancy=self.active / max(self.slots, 1),
+            allocs=self.allocs, frees=self.frees,
+            peak_active=self.peak_active,
+            decode_arena_bytes=self.decode_arena_bytes)
+
+
+@dataclasses.dataclass
+class EngineReport:
+    mode: str
+    results: Dict[int, np.ndarray]  # rid -> generated token ids
+    wall_seconds: float
+    generated_tokens: int
+    tok_s: float          # end-to-end, incl. prefill + first-call compiles
+    decode_tok_s: float   # steady-state decode hot loop only
+    p50_ms: float
+    p95_ms: float
+    steps: int
+    prefill_seconds: float
+    late_admissions: int
+    pool: Optional[PoolStats]
+
+
+class ServeEngine:
+    """Owns compilation, KV memory, and the decode hot loop for serving.
+
+    ``submit()`` queues requests; ``run()`` drives them to completion and
+    returns an :class:`EngineReport`; ``stream()`` yields ``(rid, token)``
+    pairs as they are produced (continuous mode).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int = 4, max_len: int = 64,
+                 mode: str = "continuous", seed: int = 0,
+                 backend: str = "jax",
+                 options: Optional[CompileOptions] = None):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if mode != "lockstep" and cfg.family != "dense":
+            raise NotImplementedError(
+                f"mode {mode!r} needs the dense-family serve/chunk graphs; "
+                f"{cfg.name} ({cfg.family}) serves via mode='lockstep'")
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.mode = mode
+        self.seed = seed
+        self.backend = Backend.create(backend)
+        self.base_options = options or CompileOptions()
+
+        kind = "serve" if mode == "continuous" else "decode"
+        self.graphs = build_graphs(
+            cfg, ShapeConfig(kind, kind, self.max_len, self.slots), self.slots)
+        b = self.graphs.builder
+        self.cache_names = [n.name for n in b.inputs
+                            if n.name not in _NON_CACHE_INPUTS]
+        # decode outputs 1..N map to the cache inputs they update, by
+        # name (aux["state_out_names"]); inputs absent from the list are
+        # step constants (e.g. whisper cross_k/v, vlm vision caches) and
+        # are carried over unchanged between steps
+        out_names = self.graphs.aux.get("state_out_names",
+                                        self.cache_names)
+        self._recycle = [out_names.index(n) if n in out_names else None
+                         for n in self.cache_names]
+        cache_ix = [i for i, n in enumerate(b.inputs)
+                    if n.name not in _NON_CACHE_INPUTS]
+        # donate only the inputs an output recycles into — donating a
+        # step constant would free a buffer the next step still reads
+        donate = tuple(ix for ix, j in zip(cache_ix, self._recycle)
+                       if j is not None) if mode != "lockstep" else ()
+        self.options = self.base_options.replace(donate_argnums=donate)
+        # donated mode compiles fused multi-step chunk graphs lazily (the
+        # step count is a workload property); the decode graph above still
+        # provides the cache input layout and the parameter registry
+        self.cf = (self.backend.compile(self.graphs.fn, self.options)
+                   if mode != "donated" else None)
+        self.params = b.init_params(seed)
+        self.param_order = [self.params[n] for n in b.param_names()]
+        if mode != "lockstep":
+            import jax.numpy as jnp
+            self._jparam_map = {n: jnp.asarray(v)
+                                for n, v in self.params.items()}
+            self.jparams = [self._jparam_map[n] for n in b.param_names()]
+
+        self.pool: Optional[KVCachePool] = None
+        if mode == "continuous":
+            cache_nodes = [n for n in b.inputs
+                           if n.name not in _NON_CACHE_INPUTS]
+            self.pool = KVCachePool(
+                [n.name for n in cache_nodes],
+                [n.out_types[0] for n in cache_nodes],
+                [b.input_specs[n.name] for n in cache_nodes],
+                arena_bytes=self.cf.memory_plan.arena_bytes)
+            self._tok = np.zeros((self.slots, 1), np.int32)
+            self._pos = np.zeros((self.slots,), np.int32)
+            self._slot_req: List[Optional[int]] = [None] * self.slots
+
+        self._requests: Dict[int, Request] = {}
+        self._queue: List[int] = []
+        self._next_rid = 0
+        self._steps = 0
+        self.step_seconds: List[float] = []   # decode dispatch durations
+        self.lat_ms: List[float] = []         # per-token latency samples
+        self._decode_tokens = 0
+        self.prefill_seconds = 0.0
+        self.late_admissions = 0
+        self._t0_work: Optional[float] = None  # first dispatched work
+        self._chunks: Dict[int, Tuple] = {}   # steps -> (graphs, compiled)
+        # prompt-length -> (ModelGraphs, CompiledFunction, ordered jax params)
+        self._prefill: Dict[Tuple[int, int], Tuple] = {}
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+                f"max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._requests[rid] = Request(rid, prompt, int(max_new),
+                                      t_submit=time.perf_counter())
+        self._queue.append(rid)
+        return rid
+
+    # -- prefill -------------------------------------------------------------
+    def _prefill_for(self, P: int, batch: int):
+        key = (P, batch)
+        if key not in self._prefill:
+            g = build_graphs(self.cfg,
+                             ShapeConfig("prefill", "prefill", P, batch), batch)
+            cf = self.backend.compile(g.fn, self.base_options)
+            # shared names resolve from the engine's registry (decode
+            # weights must agree); prefill-only params (e.g. the whisper
+            # encoder stack) fall back to the prefill builder's own init
+            names = g.builder.param_names()
+            missing = [n for n in names if n not in self.params]
+            own = g.builder.init_params(self.seed) if missing else {}
+            vals = {n: self.params.get(n, own.get(n)) for n in names}
+            if self.mode == "lockstep":
+                pvals = [vals[n] for n in names]
+            else:
+                import jax.numpy as jnp
+                pvals = [self._jparam_map[n] if n in self._jparam_map
+                         else jnp.asarray(vals[n]) for n in names]
+            self._prefill[key] = (g, cf, pvals)
+        return self._prefill[key]
+
+    def _prefill_inputs(self, g: ModelGraphs, prompts: np.ndarray):
+        """Non-weight prefill inputs: the token prompt plus stubbed
+        frames/images for the multimodal families (as the legacy driver
+        did — serving real media is out of scope here)."""
+        rng = np.random.default_rng(self.seed)
+        pin = []
+        for node in g.builder.inputs:
+            t = node.out_types[0]
+            if node.name == "tokens":
+                pin.append(prompts)
+            else:
+                pin.append((rng.normal(size=t.shape) * 0.02).astype(t.dtype))
+        return pin
+
+    # -- continuous batching -------------------------------------------------
+    def _admit(self, req: Request, slot: int) -> int:
+        """Prefill ``req`` into pool ``slot``; returns its first token."""
+        t0 = time.perf_counter()
+        P = len(req.prompt)
+        g, cf, pvals = self._prefill_for(P, 1)
+        outs = cf.raw(*self._prefill_inputs(g, req.prompt.reshape(1, P)),
+                      *pvals)
+        first = int(np.argmax(np.asarray(outs[0]).reshape(-1)))
+        for i, name in enumerate(g.aux.get("cache_names", [])):
+            self.pool.write_prefix(slot, name, outs[1 + i])
+        req.slot = slot
+        req.pos = P
+        req.tokens = [first]
+        req.t_admit = time.perf_counter()
+        self._slot_req[slot] = req.rid
+        self._tok[slot, 0] = first
+        self._pos[slot] = P
+        self.prefill_seconds += time.perf_counter() - t0
+        return first
+
+    def _finish(self, req: Request) -> None:
+        req.t_done = time.perf_counter()
+        if req.slot is not None:
+            self._slot_req[req.slot] = None
+            self.pool.free(req.slot)
+            req.slot = None
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine step: admit what fits, then one batched decode step.
+
+        Returns the ``(rid, token)`` pairs emitted.  Only available in
+        continuous mode — lockstep/donated run whole workloads via
+        :meth:`run`."""
+        if self.mode != "continuous":
+            raise RuntimeError("step() is only available in continuous mode")
+        if self._t0_work is None:
+            self._t0_work = time.perf_counter()
+        emitted: List[Tuple[int, int]] = []
+        while self._queue and self.pool.has_free:
+            req = self._requests[self._queue.pop(0)]
+            slot = self.pool.alloc()
+            if self._steps > 0:
+                self.late_admissions += 1
+            emitted.append((req.rid, self._admit(req, slot)))
+            if req.done:  # max_new == 1: done straight out of prefill
+                self._finish(req)
+        active = [(s, self._requests[rid])
+                  for s, rid in enumerate(self._slot_req) if rid is not None]
+        if not active:
+            return emitted
+        t0 = time.perf_counter()
+        outs = self.cf.raw(self._tok, self._pos, *self.pool.buffers,
+                           *self.jparams)
+        sample = np.asarray(outs[0])
+        self.pool.update([self.pool.buffers[k] if j is None else outs[1 + j]
+                          for k, j in enumerate(self._recycle)])
+        dt = time.perf_counter() - t0
+        self._steps += 1
+        self.step_seconds.append(dt)
+        self._decode_tokens += len(active)
+        self.lat_ms.extend([dt * 1e3] * len(active))
+        for slot, req in active:
+            tok = int(sample[slot, 0])
+            req.tokens.append(tok)
+            req.pos += 1
+            self._tok[slot, 0] = tok
+            self._pos[slot] = req.pos
+            emitted.append((req.rid, tok))
+            if req.done:
+                self._finish(req)
+        return emitted
+
+    def stream(self) -> Iterator[Tuple[int, int]]:
+        """Yield ``(rid, token)`` pairs until all submitted work drains."""
+        while self._queue or any(r is not None for r in self._slot_req):
+            for pair in self.step():
+                yield pair
+
+    # -- lockstep / donated (uniform workloads) ------------------------------
+    def _chunk_for(self, steps: int):
+        """Fused ``steps``-step decode executable (donated caches)."""
+        if steps not in self._chunks:
+            from ..models.lm import build_dense_chunk
+            g = build_dense_chunk(self.cfg, self.max_len, self.slots, steps)
+            cache_ix = [i for i, n in enumerate(g.builder.inputs)
+                        if n.name not in _NON_CACHE_INPUTS]
+            cf = self.backend.compile(
+                g.fn, self.base_options.replace(donate_argnums=tuple(cache_ix)))
+            pvals = [self._jparam_map[n] for n in g.builder.param_names()]
+            self._chunks[steps] = (g, cf, pvals)
+        return self._chunks[steps]
+
+    def _run_lockstep(self) -> None:
+        reqs = [self._requests[rid] for rid in self._queue]
+        self._queue = []
+        if not reqs:
+            return
+        if len(reqs) > self.slots:
+            raise ValueError(f"{len(reqs)} requests > {self.slots} slots "
+                             f"({self.mode} admits everything up front)")
+        P = len(reqs[0].prompt)
+        if any(len(r.prompt) != P for r in reqs):
+            raise ValueError(f"{self.mode} requires uniform prompt lengths")
+        B = self.slots
+        prompts = np.zeros((B, P), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i] = r.prompt
+        g, cf, pvals = self._prefill_for(P, B)
+        pin = self._prefill_inputs(g, prompts)
+        t0 = time.perf_counter()
+        if self.mode == "lockstep":
+            outs = cf(*pin, *pvals)
+        else:
+            outs = cf.raw(*pin, *pvals)
+        logits = np.asarray(outs[0]).reshape(B, -1)
+        tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
+        for i, r in enumerate(reqs):
+            r.pos = P
+            r.tokens = [int(tok[i, 0])]
+        # decode caches: zero-filled, prefill prefix copied in by *name*
+        # (ModelGraphs.aux["cache_names"] — prefill output i is the decode
+        # input named cache_names[i]; no shape-matching heuristics)
+        caches = self._init_caches(g, outs[1:])
+        self.prefill_seconds += time.perf_counter() - t0
+        n_steps = max(r.max_new for r in reqs) - 1
+        if n_steps <= 0:
+            for r in reqs:
+                r.t_done = time.perf_counter()
+            return
+        if self.mode == "donated":
+            self._decode_donated(reqs, tok, P, caches, n_steps)
+        else:
+            self._decode_lockstep(reqs, tok, P, caches, n_steps)
+
+    def _decode_lockstep(self, reqs, tok, P, caches, n_steps) -> None:
+        """The legacy hot loop: numpy round trip every step."""
+        B = self.slots
+        for step in range(n_steps):
+            pos = np.int32(P + step)
+            t0 = time.perf_counter()
+            outs = self.cf(tok, pos, *caches, *self.param_order)
+            logits = np.asarray(outs[0]).reshape(B, -1)
+            caches = [caches[k] if j is None else np.asarray(outs[1 + j])
+                      for k, j in enumerate(self._recycle)]
+            tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
+            dt = time.perf_counter() - t0
+            emitted = 0
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.tokens.append(int(tok[i, 0]))
+                    r.pos += 1
+                    emitted += 1
+                if r.done and r.t_done is None:
+                    r.t_done = time.perf_counter()
+            self._steps += 1
+            self.step_seconds.append(dt)
+            self._decode_tokens += emitted
+            self.lat_ms.extend([dt * 1e3] * emitted)
+            if all(r.done for r in reqs):
+                break
+
+    def _decode_donated(self, reqs, tok, P, caches, n_steps) -> None:
+        """Device-resident hot loop: one dispatch runs all ``n_steps``
+        greedy steps inside the executable; donated caches never come
+        back to the host, only the (steps, B, 1) token ids do."""
+        g, cf, pvals = self._chunk_for(n_steps)
+        t0 = time.perf_counter()
+        outs = cf.raw(tok, np.int32(P), *caches, *pvals)
+        toks = np.asarray(outs[0])  # (steps, B, 1) — syncs the chain
+        dt = time.perf_counter() - t0
+        self._steps += 1
+        self.step_seconds.append(dt)
+        # every token of the fused chunk becomes visible only when the
+        # dispatch returns, so the honest per-token latency sample is the
+        # whole chunk duration — donated mode trades time-to-token for
+        # throughput (decode_tok_s is the amortized rate)
+        for i, r in enumerate(reqs):
+            take = min(r.max_new - 1, n_steps)
+            r.tokens.extend(int(t) for t in toks[:take, i, 0])
+            r.pos += take
+            r.t_done = time.perf_counter()
+            self._decode_tokens += take
+            self.lat_ms.extend([dt * 1e3] * take)
+
+    def _init_caches(self, prefill_graphs: ModelGraphs, prefill_caches):
+        name_map = {name: prefill_caches[i] for i, name in
+                    enumerate(prefill_graphs.aux.get("cache_names", []))}
+        b = self.graphs.builder
+        caches = []
+        for node in b.inputs:
+            if node.name in _NON_CACHE_INPUTS:
+                continue
+            t = node.out_types[0]
+            buf = np.zeros(t.shape, t.dtype)
+            pc = name_map.get(node.name)
+            if pc is not None:  # unmapped inputs stay zero (rec states etc.)
+                pc = np.asarray(pc)
+                sl = [slice(None)] * buf.ndim
+                spec = tuple(b.input_specs[node.name])
+                if "kv_seq" in spec:
+                    sd = spec.index("kv_seq")
+                    sl[sd] = slice(0, pc.shape[sd])
+                buf[tuple(sl)] = pc
+            caches.append(buf)
+        if self.mode == "lockstep":
+            return caches
+        import jax.numpy as jnp
+        return [jnp.asarray(c) for c in caches]
+
+    # -- driving -------------------------------------------------------------
+    def run(self) -> EngineReport:
+        """Drive all submitted requests to completion.
+
+        Wall time is counted from the engine's first dispatched work, so
+        a ``stream()``-then-``run()`` sequence reports the full span."""
+        if self._t0_work is None:
+            self._t0_work = time.perf_counter()
+        if self.mode == "continuous":
+            for _ in self.stream():
+                pass
+        else:
+            self._run_lockstep()
+        wall = time.perf_counter() - self._t0_work
+        results = {rid: np.asarray(r.tokens, np.int32)
+                   for rid, r in self._requests.items()}
+        gen = sum(len(v) for v in results.values())
+        decode_secs = sum(self.step_seconds)
+        return EngineReport(
+            mode=self.mode, results=results, wall_seconds=wall,
+            generated_tokens=gen, tok_s=gen / max(wall, 1e-9),
+            decode_tok_s=self._decode_tokens / max(decode_secs, 1e-9),
+            p50_ms=float(np.percentile(self.lat_ms, 50)) if self.lat_ms else 0.0,
+            p95_ms=float(np.percentile(self.lat_ms, 95)) if self.lat_ms else 0.0,
+            steps=self._steps, prefill_seconds=self.prefill_seconds,
+            late_admissions=self.late_admissions,
+            pool=self.pool.stats() if self.pool is not None else None)

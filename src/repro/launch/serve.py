@@ -1,19 +1,19 @@
-"""Serving driver: prefill + batched greedy decode with KV caches.
+"""Serving CLI: a thin driver over :class:`repro.launch.engine.ServeEngine`.
 
-Demonstrates the inference path end-to-end on a reduced config: the
-prefill graph builds the caches, the decode graph is stepped token by
-token (continuous-batching style: each row of the batch can be at a
-different position; this driver keeps them in lockstep for simplicity
-and tracks per-request completion).
+The engine owns the hot loop (donated device-resident KV caches,
+continuous batching, the KV pool); this module just parses flags, builds
+a synthetic workload, and prints the report.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
-      --reduced --batch 4 --prompt-len 16 --gen 32
+      --reduced --batch 4 --prompt-len 16 --gen 32 --mode continuous
+
+``--smoke`` asserts the run is sane (tok/s > 0, pool stats consistent,
+every request fully generated) — used by the CI serving smoke step.
 """
 from __future__ import annotations
 
 import argparse
-import time
 from typing import List, Optional
 
 import numpy as np
@@ -23,91 +23,67 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="KV pool slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", default="continuous",
+                    choices=("lockstep", "donated", "continuous"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert tok/s > 0 and pool stats are sane")
     args = ap.parse_args(argv)
 
-    from ..backend import Backend, CompileOptions
     from ..configs import get_config
-    from ..configs.base import ShapeConfig
-    from ..models.lm import build_graphs
+    from .engine import ServeEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    B = args.batch
+    n_req = args.requests or args.batch
     P, G = args.prompt_len, args.gen
-    total = P + G
-    backend = Backend.create("jax")
-    opts = CompileOptions()
 
-    # -- prefill ---------------------------------------------------------------
-    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
-    params = pre.builder.init_params(args.seed)
+    mode = args.mode
+    if cfg.family != "dense" and mode != "lockstep":
+        print(f"[serve] {cfg.name} ({cfg.family}): no serve/chunk graphs "
+              f"yet, falling back to --mode lockstep")
+        mode = "lockstep"
+    engine = ServeEngine(cfg, slots=args.batch, max_len=P + G,
+                         mode=mode, seed=args.seed)
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
-    pdata = []
-    for node in pre.builder.inputs:
-        t = node.out_types[0]
-        if node.name == "tokens":
-            pdata.append(prompts)
-        else:  # frames / images stubs
-            pdata.append((rng.normal(size=t.shape) * 0.02).astype(t.dtype))
-    ex = backend.compile(pre.fn, opts)
-    t0 = time.time()
-    pouts = ex(*(pdata + [params[n] for n in pre.builder.param_names()]))
-    logits = pouts[0].reshape(B, -1)
-    pre_caches = pouts[1:]
-    print(f"[prefill] {B}x{P} tokens in {time.time()-t0:.2f}s")
+    rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G)
+            for _ in range(n_req)]
+    rep = engine.run()
 
-    # -- decode ----------------------------------------------------------------
-    dec = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
-    dparams = dec.builder.init_params(args.seed)  # same seed => same weights
-    # the decode step is the serving hot path: the backend cache means any
-    # later session with the same graph+options reuses this executable
-    dex = backend.compile(dec.fn, opts)
-    # build decode caches: zero-filled to `total`, prefill prefix copied in
-    caches: List[np.ndarray] = []
-    pre_iter = list(pre_caches)
-    for node in dec.builder.inputs:
-        if node.name in ("token", "pos"):
-            continue
-        t = node.out_types[0]
-        buf = np.zeros(t.shape, t.dtype)
-        # match a prefill cache by suffix shape when available
-        for i, pc in enumerate(pre_iter):
-            pc = np.asarray(pc)
-            if pc.ndim == buf.ndim and pc.shape[:-2] == buf.shape[:-2] and \
-                    pc.shape[-1] == buf.shape[-1]:
-                sl = [slice(None)] * buf.ndim
-                sl[-2] = slice(0, pc.shape[-2])
-                buf[tuple(sl)] = pc
-                pre_iter.pop(i)
-                break
-        caches.append(buf)
+    print(f"[serve:{rep.mode}] {n_req} reqs x {G} tokens "
+          f"(prompt {P}, {args.batch} slots) in {rep.wall_seconds:.2f}s "
+          f"({rep.tok_s:.1f} tok/s e2e, {rep.decode_tok_s:.1f} tok/s decode, "
+          f"p50 {rep.p50_ms:.2f}ms p95 {rep.p95_ms:.2f}ms/token, "
+          f"{rep.steps} steps, late admissions {rep.late_admissions})")
+    if rep.pool is not None:
+        p = rep.pool
+        print(f"[kv-pool] slots={p.slots} bytes/slot={p.bytes_per_slot} "
+              f"total={p.total_bytes} allocs={p.allocs} frees={p.frees} "
+              f"peak_active={p.peak_active} "
+              f"arena={p.decode_arena_bytes}B")
+    st = engine.backend.cache_stats()
+    print(f"[compile-cache] hits={st.hits} misses={st.misses} size={st.size}")
+    for rid in rids[:2]:
+        print(f"  req{rid}: {rep.results[rid][:12].tolist()} ...")
 
-    tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
-    out_tokens = [tok.copy()]
-    t0 = time.time()
-    for step in range(G - 1):
-        pos = np.int32(P + step)
-        outs = dex(tok, pos, *caches,
-                   *[dparams[n] for n in dec.builder.param_names()])
-        logits = np.asarray(outs[0]).reshape(B, -1)
-        caches = [np.asarray(o) for o in outs[1:]]
-        tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
-        out_tokens.append(tok.copy())
-    dt = time.time() - t0
-    gen = np.concatenate(out_tokens, axis=1)
-    print(f"[decode] {B} x {G} tokens in {dt:.2f}s "
-          f"({B * (G - 1) / max(dt, 1e-9):.1f} tok/s)")
-    st = backend.cache_stats()
-    print(f"[compile-cache] hits={st.hits} misses={st.misses} "
-          f"size={st.size}")
-    for i in range(min(B, 2)):
-        print(f"  req{i}: {gen[i, :12].tolist()} ...")
+    if args.smoke:
+        assert rep.tok_s > 0, "tok/s must be positive"
+        assert all(len(rep.results[r]) == G for r in rids), \
+            "every request must generate all tokens"
+        if rep.pool is not None:
+            p = rep.pool
+            assert p.active == 0 and p.occupancy == 0.0, \
+                "pool must drain when all requests finish"
+            assert p.allocs == n_req and p.frees == n_req, \
+                f"allocs/frees must match requests ({p.allocs}/{p.frees})"
+            assert p.total_bytes > 0 and p.bytes_per_slot > 0
+        print("[smoke] ok")
     return 0
 
 

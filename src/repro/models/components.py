@@ -68,6 +68,35 @@ def rope_tables(b: ModelBuilder, seq: int, d_head: int, base: float = 10000.0,
     return ops.cos(ang), ops.sin(ang)
 
 
+def rope_tables_rows(b: ModelBuilder, pos: Value, d_head: int,
+                     base: float = 10000.0) -> Tuple[Value, Value]:
+    """Per-row cos/sin tables from a *vector* of absolute positions:
+    ``pos`` (B,) i32 -> (B, d_head//2) f32 tables.  The continuous-batching
+    serve graph uses this so each batch row can sit at its own position."""
+    half = d_head // 2
+    B = pos.shape[0]
+    freq = ops.constant(
+        (base ** (-np.arange(half, dtype=np.float64) * 2.0 / d_head))
+        .astype(np.float32))  # (half,)
+    posf = ops.convert(pos, "f32")
+    ang = ops.reshape(posf, (B, 1)) * ops.reshape(freq, (1, half))
+    return ops.cos(ang), ops.sin(ang)
+
+
+def apply_rope_rows(x: Value, cos: Value, sin: Value) -> Value:
+    """x: (B, H, 1, D); cos/sin: (B, D//2) per-row tables (see
+    :func:`rope_tables_rows`).  Same rotate-half math as apply_rope."""
+    B, H, S, D = x.shape
+    half = D // 2
+    x1 = ops.slice_(x, [0, 0, 0, 0], [B, H, S, half])
+    x2 = ops.slice_(x, [0, 0, 0, half], [B, H, S, D])
+    c = ops.reshape(cos, (B, 1, 1, half))
+    s = ops.reshape(sin, (B, 1, 1, half))
+    c = ops.convert(ops.broadcast_to(c, (B, H, S, half)), x.dtype)
+    s = ops.convert(ops.broadcast_to(s, (B, H, S, half)), x.dtype)
+    return ops.concat([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
 def apply_rope(x: Value, cos: Value, sin: Value) -> Value:
     """x: (B, H, S, D); cos/sin: (S, D//2).  Rotate-half convention."""
     B, H, S, D = x.shape
@@ -154,18 +183,32 @@ def self_attention(
     # decode-with-cache:
     cache_k: Optional[Value] = None,   # (B, Hkv, Skv, D)
     cache_v: Optional[Value] = None,
-    pos: Optional[Value] = None,       # scalar i32 absolute position
+    pos: Optional[Value] = None,       # i32 absolute position: scalar, or a
+                                       # (B,) vector for per-row positions
+                                       # (continuous-batching serve graphs)
     ring: bool = False,                # ring (rolling) cache for SWA decode
     return_kv: bool = False,           # prefill: emit (k, v) for the cache
 ) -> Tuple[Value, Tuple[Value, ...]]:
     """Returns (out (B,S,Dm), extra) where extra = (new_k, new_v) when a
     cache was threaded through (or when ``return_kv``)."""
+    pos_rows = pos is not None and pos.rank == 1
     q, k, v = project_qkv(b, x, w, prefix, n_heads, n_kv, qkv_bias)
     if rope is not None:
-        q = apply_rope(q, *rope)
-        k = apply_rope(k, *rope)
+        if pos_rows:  # rope contains per-row (B, D//2) tables
+            q = apply_rope_rows(q, *rope)
+            k = apply_rope_rows(k, *rope)
+        else:
+            q = apply_rope(q, *rope)
+            k = apply_rope(k, *rope)
     extras: Tuple[Value, ...] = (k, v) if return_kv else ()
-    if cache_k is not None:
+    if pos_rows:
+        if cache_k is None or ring:
+            raise ValueError("vector pos requires a (non-ring) KV cache")
+        cache_k, cache_v, att = _rowpos_cached_attention(
+            b, q, k, v, cache_k, cache_v, pos, n_heads=n_heads, n_kv=n_kv,
+            d_head=d_head, window=window)
+        extras = (cache_k, cache_v)
+    elif cache_k is not None:
         Skv = cache_k.shape[2]
         zero = ops.constant(0, dtype="i32")
         if ring:
@@ -193,6 +236,56 @@ def self_attention(
                             scale=1.0 / math.sqrt(d_head))
     out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
     return constrain(out, BATCH_SPEC), extras
+
+
+def _rowpos_cached_attention(
+    b: ModelBuilder, q: Value, k: Value, v: Value,
+    cache_k: Value, cache_v: Value, pos: Value, *,
+    n_heads: int, n_kv: int, d_head: int, window: Optional[int] = None,
+) -> Tuple[Value, Value, Value]:
+    """Single-token cached attention with a per-row position vector.
+
+    q/k/v: (B, H, 1, D); cache_k/v: (B, Hkv, Skv, D); pos: (B,) i32.
+    Each row writes its k/v at slot ``pos[b]`` (a one-hot blend —
+    DynamicUpdateSlice only takes scalar starts) and attends keys with
+    ``kpos <= pos[b]``, so rows at different decode depths share one
+    batched step.  Numerics mirror ``decompose_attention``: f32 scores,
+    -1e30 mask fill, f32 softmax.  Returns (new_k, new_v, att (B,H,1,Dv)).
+    """
+    B, Hkv, Skv, D = cache_k.shape
+    Dv = cache_v.shape[-1]
+    kpos = ops.iota((B, Skv), 1, "i32")
+    posb = ops.broadcast_to(ops.reshape(pos, (B, 1)), (B, Skv))
+    write = ops.reshape(ops.equal(kpos, posb), (B, 1, Skv, 1))
+
+    def blend(cache, new):
+        return ops.select(ops.broadcast_to(write, cache.shape),
+                          ops.broadcast_to(ops.convert(new, cache.dtype),
+                                           cache.shape),
+                          cache)
+
+    cache_k = blend(cache_k, k)
+    cache_v = blend(cache_v, v)
+    rep = n_heads // n_kv
+    q5 = ops.reshape(ops.convert(q, "f32"), (B, n_kv, rep, 1, D))
+    kf = ops.convert(cache_k, "f32")
+    vf = ops.convert(cache_v, "f32")
+    scores = ops.multiply(
+        ops.einsum("bhrqd,bhkd->bhrqk", q5, kf),
+        ops.broadcast_to(ops.constant(1.0 / math.sqrt(d_head), dtype="f32"),
+                         (B, n_kv, rep, 1, Skv)))
+    mask = ops.less_equal(kpos, posb)
+    if window is not None:
+        w = ops.constant(window, dtype="i32")
+        mask = ops.logical_and(
+            mask, ops.greater(kpos, posb - ops.broadcast_to(w, (B, Skv))))
+    maskb = ops.broadcast_to(ops.reshape(mask, (B, 1, 1, 1, Skv)),
+                             scores.shape)
+    neg = ops.broadcast_to(ops.constant(-1e30, dtype="f32"), scores.shape)
+    p = ops.softmax(ops.select(maskb, scores, neg), axis=-1)
+    att = ops.einsum("bhrqk,bhkd->bhrqd", p, vf)
+    att = ops.convert(ops.reshape(att, (B, n_heads, 1, Dv)), q.dtype)
+    return cache_k, cache_v, att
 
 
 def cross_attention(

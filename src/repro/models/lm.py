@@ -159,7 +159,40 @@ def build_dense(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs
         logits = _final_logits(b, cfg, h, last_only=True)
         return ModelGraphs(cfg, kind, b.finish(
             [logits, ys[0], ys[1]], f"{cfg.name}_prefill"), b,
-            {"cache_shapes": [y.shape for y in ys]})
+            {"cache_shapes": [y.shape for y in ys],
+             "cache_names": ["cache_k", "cache_v"]})
+
+    # serve: continuous-batching decode step — per-row position vector and
+    # in-graph greedy sampling, so only token ids cross the host boundary
+    if kind == "serve":
+        Skv = shape.seq_len
+        token = b.input("token", (batch, 1))
+        pos = b.input("pos", (batch,), spec=("batch",))
+        ck = b.input("cache_k", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                     dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+        cv = b.input("cache_v", (cfg.n_layers, batch, cfg.n_kv_heads, Skv, dh),
+                     dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+        h = _embed(b, cfg, token)
+        cosr, sinr = C.rope_tables_rows(b, pos, dh, cfg.rope_base)
+
+        def body(carries, w, consts):
+            hh, ex = _dense_block(
+                b, cfg, carries[0], w, (consts[0], consts[1]),
+                window=cfg.window, cache=(w["cache_k"], w["cache_v"]),
+                pos=consts[2])
+            return [hh], list(ex)
+
+        (h,), ys = b.scan_blocks(
+            "layers", cfg.n_layers, specs, body, [h],
+            consts=[cosr, sinr, pos], xs_extra={"cache_k": ck, "cache_v": cv},
+            n_ys=2, weight_inits=inits)
+        logits = _final_logits(b, cfg, h, last_only=True)
+        sample = ops.reshape(ops.argmax(logits, -1), (batch, 1))
+        return ModelGraphs(cfg, kind, b.finish(
+            [sample, ys[0], ys[1]], f"{cfg.name}_serve"), b,
+            {"cache_names": ["cache_k", "cache_v"],
+             "state_out_names": ["cache_k", "cache_v"],
+             "sample_output": 0})
 
     # decode
     Skv = _cache_len(cfg, shape)
@@ -185,7 +218,117 @@ def build_dense(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs
         xs_extra={"cache_k": ck, "cache_v": cv}, n_ys=2, weight_inits=inits)
     logits = _final_logits(b, cfg, h, last_only=True)
     return ModelGraphs(cfg, kind, b.finish(
-        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b, {})
+        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b,
+        {"cache_names": ["cache_k", "cache_v"]})
+
+
+def build_dense_chunk(cfg: ModelConfig, max_len: int, batch: int,
+                      steps: int) -> ModelGraphs:
+    """``steps`` fused greedy-decode steps in one executable.
+
+    The decode hot loop — layer scan, cache update, argmax, and the
+    token feedback into the embedding — runs inside an outer Scan, so a
+    single dispatch generates ``steps`` tokens per row and the per-step
+    host/dispatch overhead is amortized away (nGraph sec. 4: the
+    execution loop belongs inside the backend executable).
+
+    (token (B,1), pos (), cache_k, cache_v, *W) ->
+        (tokens (steps,B,1), cache_k', cache_v')
+
+    Token-for-token identical to stepping the ``decode`` graph: the body
+    is the same block stack, and greedy argmax breaks ties toward the
+    lower index exactly like ``np.argmax`` on the returned logits.
+    Parameters are declared in the same order as the decode/serve
+    builders, so ``init_params(seed)`` yields identical weights.
+    """
+    from ..core.types import is_float
+
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    L, dh = cfg.n_layers, cfg.head_dim
+    specs, inits = _dense_layer_specs(cfg)
+    token = b.input("token", (batch, 1))
+    pos = b.input("pos", (), spec=())
+    ck = b.input("cache_k", (L, batch, cfg.n_kv_heads, max_len, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    cv = b.input("cache_v", (L, batch, cfg.n_kv_heads, max_len, dh),
+                 dtype=cfg.compute_dtype, spec=CACHE_SPEC)
+    # params, in decode-builder declaration order: embed, layers, final
+    table = b.raw_param("embed/table", (cfg.vocab, cfg.d_model),
+                        ("vocab", "embed"))
+    wnames = list(specs)
+    stacked = []
+    for wname in wnames:
+        shape_, logical = specs[wname]
+        v = b.raw_param(f"layers/{wname}", (L,) + tuple(shape_),
+                        ("layers",) + tuple(logical), inits.get(wname))
+        if is_float(v.dtype):
+            v = ops.convert(v, b.compute_dtype)
+        stacked.append(v)
+    gf = b.raw_param("final_norm/g", (cfg.d_model,), (None,), ones_init())
+    bf = None
+    if cfg.norm == "layernorm":
+        from .builder import zeros_init
+        bf = b.raw_param("final_norm/b", (cfg.d_model,), (None,), zeros_init())
+    wu = None
+    if not cfg.tie_embeddings:
+        wu = b.raw_param("unembed/w", (cfg.d_model, cfg.vocab),
+                         ("embed", "vocab"))
+
+    # outer-scan body: one full decode step on body-local parameters
+    cp_tok = ops.parameter((batch, 1), "i32", "tok")
+    cp_pos = ops.parameter((), "i32", "pos")
+    cp_ck = ops.parameter(ck.shape, ck.dtype, "ck")
+    cp_cv = ops.parameter(cv.shape, cv.dtype, "cv")
+    const_vals = [table] + stacked + [gf] + ([bf] if bf is not None else []) \
+        + ([wu] if wu is not None else [])
+    const_params = [ops.parameter(v.shape, v.dtype, f"w{i}")
+                    for i, v in enumerate(const_vals)]
+    cw = [p.out() for p in const_params]
+    c_table, c_stacked = cw[0], cw[1:1 + len(stacked)]
+    c_gf = cw[1 + len(stacked)]
+    nxt = 2 + len(stacked)
+    c_bf = cw[nxt] if bf is not None else None
+    c_wu = cw[-1] if wu is not None else None
+
+    h = C.constrain(ops.gather(ops.convert(c_table, b.compute_dtype),
+                               cp_tok.out(), axis=0), C.BATCH_SPEC)
+    cos, sin = C.rope_tables(b, 1, dh, cfg.rope_base, offset=cp_pos.out())
+
+    def body(carries, w, consts):
+        hh, ex = _dense_block(
+            b, cfg, carries[0], w, (consts[0], consts[1]),
+            window=cfg.window, cache=(w["cache_k"], w["cache_v"]),
+            pos=consts[2])
+        return [hh], list(ex)
+
+    xs_extra = dict(zip(wnames, c_stacked))
+    xs_extra["cache_k"] = cp_ck.out()
+    xs_extra["cache_v"] = cp_cv.out()
+    (h,), ys = b.scan_blocks(
+        "chunk_layers", L, {}, body, [h],
+        consts=[cos, sin, cp_pos.out()], xs_extra=xs_extra, n_ys=2)
+    if cfg.norm == "layernorm":
+        h = ops.layer_norm(h, c_gf, c_bf, eps=cfg.norm_eps)
+    else:
+        h = ops.rms_norm(h, c_gf, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        wun = ops.transpose(ops.convert(c_table, b.compute_dtype), (1, 0))
+    else:
+        wun = ops.convert(c_wu, b.compute_dtype)
+    logits = C.constrain(ops.matmul(h, wun), ("batch", None, "vocab"))
+    sample = ops.argmax(logits, -1)  # (B, 1) i32
+    new_pos = cp_pos.out() + ops.constant(1, dtype="i32")
+    body_fn = Function([cp_tok, cp_pos, cp_ck, cp_cv] + const_params,
+                       [sample, new_pos, ys[0], ys[1], sample],
+                       name=f"{cfg.name}_chunk_body")
+
+    outs = ops.scan(body_fn, [token, pos, ck, cv], xs=[],
+                    consts=const_vals, length=steps)
+    toks = outs[4]  # stacked ys: (steps, B, 1)
+    fn = b.finish([toks, outs[2], outs[3]], f"{cfg.name}_chunk{steps}")
+    return ModelGraphs(cfg, "decode_chunk", fn, b,
+                       {"cache_names": ["cache_k", "cache_v"],
+                        "steps": steps})
 
 
 # =============================================================================
@@ -263,7 +406,8 @@ def build_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
                 f"{cfg.name}_train"), b, {})
         logits = _final_logits(b, cfg, h, last_only=True)
         return ModelGraphs(cfg, kind, b.finish(
-            [logits, ys[0], ys[1]], f"{cfg.name}_prefill"), b, {})
+            [logits, ys[0], ys[1]], f"{cfg.name}_prefill"), b,
+            {"cache_names": ["cache_k", "cache_v"]})
 
     Skv = _cache_len(cfg, shape)
     ring = shape.kind == "long_decode" and cfg.window is not None
@@ -290,7 +434,9 @@ def build_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
         n_ys=2, weight_inits=inits)
     logits = _final_logits(b, cfg, h, last_only=True)
     return ModelGraphs(cfg, kind, b.finish(
-        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b, {})
+        [logits, ys[0], ys[1]], f"{cfg.name}_decode"), b,
+        {"cache_names": ["cache_k", "cache_v"],
+         "state_out_names": ["cache_k", "cache_v"]})
 
 
 # =============================================================================
@@ -389,7 +535,9 @@ def build_mla_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGrap
             logits = _final_logits(b, cfg, h, last_only=True)
             return ModelGraphs(cfg, kind, b.finish(
                 [logits] + list(ys_d) + list(ys_m),
-                f"{cfg.name}_prefill"), b, {})
+                f"{cfg.name}_prefill"), b,
+                {"cache_names": ["dense_ckv", "dense_kr",
+                                 "moe_ckv", "moe_kr"]})
 
         aux = aux * ops.constant(cfg.router_aux_weight / max(nm, 1), dtype="f32")
         loss = _loss_result(b, cfg, h, labels, aux)
@@ -434,7 +582,10 @@ def build_mla_moe(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGrap
         xs_extra={"ckv": cm_kv, "kr": cm_kr}, n_ys=2, weight_inits=imo)
     logits = _final_logits(b, cfg, h, last_only=True)
     return ModelGraphs(cfg, kind, b.finish(
-        [logits] + list(ys_d) + list(ys_m), f"{cfg.name}_decode"), b, {})
+        [logits] + list(ys_d) + list(ys_m), f"{cfg.name}_decode"), b,
+        {"cache_names": ["dense_ckv", "dense_kr", "moe_ckv", "moe_kr"],
+         "state_out_names": ["dense_ckv", "dense_kr",
+                             "moe_ckv", "moe_kr"]})
 
 
 def _mtp_loss(b: ModelBuilder, cfg: ModelConfig, h: Value, tokens: Value,
@@ -574,8 +725,13 @@ def build_rg(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
             return ModelGraphs(cfg, kind, b.finish(
                 [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
         logits = _final_logits(b, cfg, h, last_only=True)
+        names = [f"g_{i}_{t}" for i, k in enumerate(pat) if k == "attn"
+                 for t in ("ck", "cv")]
+        names += [f"t_{i}_{t}" for i, k in enumerate(tail_pat) if k == "attn"
+                  for t in ("ck", "cv")]
         return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                               f"{cfg.name}_prefill"), b, {})
+                                               f"{cfg.name}_prefill"), b,
+                           {"cache_names": names})
 
     # decode: recurrent state + windowed attention cache
     Skv = _cache_len(cfg, shape)
@@ -631,8 +787,23 @@ def build_rg(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
                                   n_ys=n_states(tail_pat), weight_inits=it)
         ys += list(ys2)
     logits = _final_logits(b, cfg, h, last_only=True)
+    names = [f"g_{i}_{t}" for i, k in enumerate(pat) if k == "attn"
+             for t in ("ck", "cv")]
+    names += [f"t_{i}_{t}" for i, k in enumerate(tail_pat) if k == "attn"
+              for t in ("ck", "cv")]
+
+    def out_order(tag, pattern):
+        rec = [f"{tag}_{i}_{t}" for i, k in enumerate(pattern) if k == "rec"
+               for t in ("tail", "h")]
+        att = [f"{tag}_{i}_{t}" for i, k in enumerate(pattern) if k == "attn"
+               for t in ("ck", "cv")]
+        return rec + att  # _rg_group emits states first, then kvs
+
     return ModelGraphs(cfg, kind, b.finish([logits] + ys,
-                                           f"{cfg.name}_decode"), b, {})
+                                           f"{cfg.name}_decode"), b,
+                       {"cache_names": names,
+                        "state_out_names": out_order("g", pat)
+                        + out_order("t", tail_pat)})
 
 
 # =============================================================================
@@ -688,7 +859,8 @@ def build_xlstm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs
         # to rebuild chunkwise; see DESIGN.md).
         logits = _final_logits(b, cfg, h, last_only=True)
         return ModelGraphs(cfg, kind, b.finish([logits],
-                                               f"{cfg.name}_prefill"), b, {})
+                                               f"{cfg.name}_prefill"), b,
+                           {"cache_names": []})
 
     # decode: pure recurrent state, no KV cache at any context length
     token = b.input("token", (batch, 1))
@@ -730,7 +902,10 @@ def build_xlstm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs
                              xs_extra=xs_extra, n_ys=7, weight_inits=inits)
     logits = _final_logits(b, cfg, h, last_only=True)
     return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                           f"{cfg.name}_decode"), b, {})
+                                           f"{cfg.name}_decode"), b,
+                       {"cache_names": [],
+                        "state_out_names": ["m_C", "m_n", "m_m", "s_h",
+                                            "s_c", "s_n", "s_m"]})
 
 
 # =============================================================================
@@ -846,7 +1021,8 @@ def build_encdec(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraph
                 [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
         logits = _final_logits(b, cfg, h, last_only=True)
         return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                               f"{cfg.name}_prefill"), b, {})
+                                               f"{cfg.name}_prefill"), b,
+                           {"cache_names": ["cache_k", "cache_v"]})
 
     # decode: self cache + precomputed per-layer cross k/v caches
     Skv = _cache_len(cfg, shape)
@@ -890,7 +1066,9 @@ def build_encdec(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraph
         weight_inits=idd)
     logits = _final_logits(b, cfg, h, last_only=True)
     return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                           f"{cfg.name}_decode"), b, {})
+                                           f"{cfg.name}_decode"), b,
+                       {"cache_names": ["cache_k", "cache_v"],
+                        "state_out_names": ["cache_k", "cache_v"]})
 
 
 # =============================================================================
@@ -1003,8 +1181,11 @@ def build_vlm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
             return ModelGraphs(cfg, kind, b.finish(
                 [_loss_result(b, cfg, h, labels)], f"{cfg.name}_train"), b, {})
         logits = _final_logits(b, cfg, h, last_only=True)
+        names = [f"g_{i}_{t}" for i in range(cfg.cross_every)
+                 for t in ("ck", "cv")]
         return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                               f"{cfg.name}_prefill"), b, {})
+                                               f"{cfg.name}_prefill"), b,
+                           {"cache_names": names})
 
     # decode
     Skv = _cache_len(cfg, shape)
@@ -1036,8 +1217,11 @@ def build_vlm(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> ModelGraphs:
                              consts=[cos, sin, pos], xs_extra=xs_extra,
                              n_ys=2 * cfg.cross_every, weight_inits=inits)
     logits = _final_logits(b, cfg, h, last_only=True)
+    names = [f"g_{i}_{t}" for i in range(cfg.cross_every)
+             for t in ("ck", "cv")]
     return ModelGraphs(cfg, kind, b.finish([logits] + list(ys),
-                                           f"{cfg.name}_decode"), b, {})
+                                           f"{cfg.name}_decode"), b,
+                       {"cache_names": names, "state_out_names": names})
 
 
 # =============================================================================
@@ -1058,4 +1242,8 @@ def build_graphs(cfg: ModelConfig, shape: ShapeConfig,
                  batch: Optional[int] = None) -> ModelGraphs:
     if cfg.family not in _FAMILIES:
         raise KeyError(f"unknown family {cfg.family}")
+    if shape.kind == "serve" and cfg.family != "dense":
+        raise NotImplementedError(
+            f"serve (continuous-batching) graphs are only built for the "
+            f"dense family so far, not {cfg.family!r}")
     return _FAMILIES[cfg.family](cfg, shape, batch or shape.global_batch)

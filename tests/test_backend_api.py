@@ -165,6 +165,37 @@ def test_warmup_and_timing_hook():
     assert len(seen) == 1  # removed hooks stop firing
 
 
+def test_warmup_is_donation_safe():
+    """Warming an executable compiled with donate_argnums must not
+    invalidate caller buffers, and real calls afterwards must work
+    (the serving engine warms donated decode executables)."""
+    import jax.numpy as jnp
+
+    be = Backend.create("jax", fresh=True)
+    cf = be.compile(_graph(), CompileOptions(donate_argnums=(0,)))
+    x, w = _args()
+    jx = jnp.asarray(x)  # caller-held device buffer
+    cf.warmup()
+    cf.warmup()  # repeated warmups allocate fresh zeros each time
+    assert not jx.is_deleted()  # warmup never touched caller buffers
+    # post-warmup real calls are unpoisoned, numpy path copies per call
+    ref = cf(x, w)[0]
+    again = cf(x, w)[0]
+    np.testing.assert_array_equal(ref, again)
+    # the raw path honors donation: the donated arg is consumed
+    out = cf.raw(jx, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out[0]), ref, atol=1e-6)
+    assert jx.is_deleted()
+
+
+def test_donate_argnums_validated_against_parameters():
+    be = Backend.create("jax", fresh=True)
+    with pytest.raises(OptionsError, match="out of range"):
+        be.compile(_graph(), CompileOptions(donate_argnums=(7,)))
+    with pytest.raises(OptionsError, match="out of range"):
+        be.compile(_graph(), CompileOptions(donate_argnums=(-1,)))
+
+
 def test_cache_key_includes_param_names_and_resolved_level():
     """A renamed-but-structurally-identical graph must NOT be a cache hit
     (the executable binds named parameters), while level=None vs an

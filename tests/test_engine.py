@@ -1,0 +1,135 @@
+"""ServeEngine correctness: the donated device-resident loop must be
+token-for-token identical to the legacy numpy lockstep driver; continuous
+batching must isolate requests perfectly (ragged workloads, late
+admissions, slot reuse); the KV pool must account its slots."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import MODES, ServeEngine
+
+CFG = get_config("deepseek-7b").reduced()
+
+
+def _prompt(rng, n):
+    return rng.integers(0, CFG.vocab, size=(n,)).astype(np.int32)
+
+
+def test_donated_matches_lockstep_token_for_token():
+    P, G, slots = 8, 10, 2
+    rng = np.random.default_rng(3)
+    prompts = [_prompt(rng, P) for _ in range(slots)]
+    results = {}
+    for mode in ("lockstep", "donated"):
+        eng = ServeEngine(CFG, slots=slots, max_len=P + G, mode=mode, seed=0)
+        rids = [eng.submit(p, G) for p in prompts]
+        rep = eng.run()
+        results[mode] = [rep.results[r] for r in rids]
+        assert all(len(rep.results[r]) == G for r in rids)
+    for a, b in zip(results["lockstep"], results["donated"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_continuous_ragged_matches_alone():
+    """6 ragged requests on 4 slots (late admissions, different prompt and
+    generation lengths) — every request's output must equal running it
+    alone in an identically-shaped engine."""
+    slots, max_len = 4, 24
+    rng = np.random.default_rng(7)
+    workload = [(_prompt(rng, p), g)
+                for p, g in [(4, 6), (6, 9), (8, 5), (5, 12), (7, 7), (9, 4)]]
+
+    eng = ServeEngine(CFG, slots=slots, max_len=max_len, mode="continuous",
+                      seed=0)
+    rids = [eng.submit(p, g) for p, g in workload]
+    rep = eng.run()
+    assert rep.late_admissions >= 2  # the 4 slots were oversubscribed
+    for rid, (prompt, g) in zip(rids, workload):
+        assert len(rep.results[rid]) == g
+        alone = ServeEngine(CFG, slots=slots, max_len=max_len,
+                            mode="continuous", seed=0)
+        arid = alone.submit(prompt, g)
+        np.testing.assert_array_equal(alone.run().results[arid],
+                                      rep.results[rid],
+                                      err_msg=f"request {rid} diverged")
+
+
+def test_kv_pool_slot_reuse_no_leakage():
+    """Sequential requests through a 1-slot pool: the second request
+    reuses the first one's cache rows without re-zeroing — its output
+    must still match a fresh engine (no cross-request leakage)."""
+    max_len = 16
+    rng = np.random.default_rng(11)
+    pa, pb = _prompt(rng, 6), _prompt(rng, 9)
+
+    eng = ServeEngine(CFG, slots=1, max_len=max_len, mode="continuous",
+                      seed=0)
+    ra = eng.submit(pa, 8)
+    rb = eng.submit(pb, 5)
+    rep = eng.run()
+    p = rep.pool
+    assert (p.allocs, p.frees, p.active) == (2, 2, 0)
+    assert p.peak_active == 1 and p.slots == 1
+    assert p.total_bytes > 0 and p.bytes_per_slot == p.total_bytes
+
+    fresh = ServeEngine(CFG, slots=1, max_len=max_len, mode="continuous",
+                        seed=0)
+    fb = fresh.submit(pb, 5)
+    np.testing.assert_array_equal(fresh.run().results[fb], rep.results[rb])
+    # and A (which ran on pristine rows) matches a fresh run too
+    fresh2 = ServeEngine(CFG, slots=1, max_len=max_len, mode="continuous",
+                         seed=0)
+    fa = fresh2.submit(pa, 8)
+    np.testing.assert_array_equal(fresh2.run().results[fa], rep.results[ra])
+
+
+def test_streaming_and_report_stats():
+    slots, P, G = 2, 5, 6
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(CFG, slots=slots, max_len=P + G, mode="continuous",
+                      seed=0)
+    rids = [eng.submit(_prompt(rng, P), G) for _ in range(3)]
+    seen = {rid: [] for rid in rids}
+    for rid, tok in eng.stream():
+        seen[rid].append(tok)
+    rep = eng.run()  # already drained: no-op, report only
+    for rid in rids:
+        assert seen[rid] == list(rep.results[rid])
+        assert len(seen[rid]) == G
+    assert rep.generated_tokens == 3 * G
+    assert rep.pool.occupancy == 0.0
+    assert rep.pool.decode_arena_bytes > 0
+
+
+def test_submit_validation_and_modes():
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="continuous", seed=0)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(6, np.int32), 4)  # 6 + 4 > 8
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(2, np.int32), 0)
+    with pytest.raises(ValueError):
+        ServeEngine(CFG, mode="warp")
+    assert MODES == ("lockstep", "donated", "continuous")
+
+
+def test_lockstep_runs_multimodal_families():
+    """The engine must keep the legacy driver's reach: encdec/vlm prefill
+    takes stubbed frames/images and declares encoder-only params — the
+    lockstep path has to thread both (regression: PR 2 review)."""
+    cfg = get_config("whisper-medium").reduced()
+    eng = ServeEngine(cfg, slots=2, max_len=10, mode="lockstep", seed=0)
+    rng = np.random.default_rng(5)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, size=(4,)), 6)
+            for _ in range(2)]
+    rep = eng.run()
+    assert all(len(rep.results[r]) == 6 for r in rids)
+    assert rep.decode_tok_s > 0
+
+
+def test_max_new_one_finishes_at_prefill():
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="continuous", seed=0)
+    rid = eng.submit(_prompt(rng, 4), 1)
+    rep = eng.run()
+    assert len(rep.results[rid]) == 1
+    assert rep.pool.allocs == 1 and rep.pool.frees == 1

@@ -79,6 +79,91 @@ def test_mla_latent_decode_matches_prefill():
                           np.argmax(prefill_logits, -1))
 
 
+def test_serve_graph_matches_decode_graph():
+    """The continuous-batching serve graph (vector pos, one-hot cache
+    writes, in-graph argmax) must emit the same greedy tokens as stepping
+    the scalar-pos decode graph when all rows share a position."""
+    cfg = get_config("deepseek-7b").reduced()
+    B, P, G = 2, 8, 6
+    total = P + G
+    rng = np.random.default_rng(0)
+    jt = Backend.create("jax")
+    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
+    params = pre.builder.init_params(0)
+    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
+    pouts = jt.compile(pre.fn)(
+        prompts, *[params[n] for n in pre.builder.param_names()])
+    tok = np.argmax(np.asarray(pouts[0]).reshape(B, -1), -1) \
+        .astype(np.int32).reshape(B, 1)
+
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+    srv = build_graphs(cfg, ShapeConfig("serve", "serve", total, B), B)
+    dex, sex = jt.compile(dec.fn), jt.compile(srv.fn)
+    dparams = dec.builder.init_params(0)
+    sparams = srv.builder.init_params(0)
+
+    def caches_for(g):
+        out = []
+        for node in g.builder.inputs:
+            if node.name in ("token", "pos"):
+                continue
+            t = node.out_types[0]
+            buf = np.zeros(t.shape, t.dtype)
+            i = g.aux["cache_names"].index(node.name)
+            pc = np.asarray(pouts[1 + i])
+            buf[:, :, :, :pc.shape[3], :] = pc
+            out.append(buf)
+        return out
+
+    dc, sc = caches_for(dec), caches_for(srv)
+    tok_d = tok.copy()
+    tok_s = tok.copy()
+    for step in range(G - 1):
+        douts = dex(tok_d, np.int32(P + step), *dc,
+                    *[dparams[n] for n in dec.builder.param_names()])
+        tok_d = np.argmax(np.asarray(douts[0]).reshape(B, -1), -1) \
+            .astype(np.int32).reshape(B, 1)
+        dc = [np.asarray(o) for o in douts[1:]]
+        souts = sex(tok_s, np.full((B,), P + step, np.int32), *sc,
+                    *[sparams[n] for n in srv.builder.param_names()])
+        tok_s = np.asarray(souts[0])
+        sc = [np.asarray(o) for o in souts[1:]]
+        assert np.array_equal(tok_d, tok_s), f"diverged at step {step}"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x22b",
+                                  "deepseek-v3-671b", "whisper-medium",
+                                  "recurrentgemma-9b", "llama-3.2-vision-11b",
+                                  "xlstm-350m"])
+def test_cache_name_map_prefill_to_decode(arch):
+    """Prefill cache output i maps to the decode cache input named
+    ``aux["cache_names"][i]`` — explicit, not shape-matched.  Every
+    family exports the map (xLSTM's is empty by design: its prefill
+    emits no recurrent state, decode rebuilds from zeros)."""
+    cfg = get_config(arch).reduced()
+    B, P = 2, 8
+    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", P, B), B)
+    names = pre.aux["cache_names"]
+    assert names or cfg.family == "xlstm", \
+        f"{arch}: prefill must name its cache outputs"
+    assert names == dec.aux["cache_names"]
+    assert len(names) == len(pre.fn.results) - 1  # every non-logits output
+    dec_inputs = {n.name: n.out_types[0] for n in dec.builder.inputs}
+    for i, name in enumerate(names):
+        assert name in dec_inputs, f"{arch}: no decode input {name!r}"
+        pt = pre.fn.results[1 + i].type
+        dt = dec_inputs[name]
+        spec = tuple(dec.builder.input_specs[name])
+        # shapes agree everywhere except the kv_seq axis (prefill wrote
+        # P rows into a total-length cache)
+        for ax, (a, b) in enumerate(zip(pt.shape, dt.shape)):
+            if "kv_seq" in spec and ax == spec.index("kv_seq"):
+                assert a <= b
+            else:
+                assert a == b, f"{arch}/{name}: axis {ax} {pt} vs {dt}"
+
+
 def test_ring_buffer_swa_decode():
     """Mixtral long-context: ring-cache decode equals full-cache decode
     once the window is saturated (steady state)."""

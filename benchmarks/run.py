@@ -11,6 +11,10 @@
   E9 compile_cache— Backend compile cache: cold vs cached decode compile
   E10 serving     — ServeEngine tok/s + per-token latency: lockstep vs
                     donated device-resident vs continuous batching
+  E11 autotune    — attention autotuner: static default vs recorded
+                    winner on the serving decode step; the record must be
+                    reused with zero sweeps, and a cold process must hit
+                    the persistent disk cache instead of the pipeline
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
 diffing across commits; rows also accumulate in ``ROWS`` so
@@ -287,6 +291,65 @@ def bench_compile_cache():
     emit("E9_compile_cache", "misses", st.misses, "")
 
 
+def bench_autotune():
+    """E11: autotuned attention knobs vs the static default on the E10
+    serving decode step, plus the persistence contract: the tuning
+    record is reused sweep-free and a fresh backend over the same cache
+    dir warm-starts from disk."""
+    import shutil
+    import tempfile
+
+    from repro.backend import Backend, CompileOptions
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+
+    cfg = get_config("deepseek-7b").reduced()
+    B, total = 4, 48
+    dec = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+    args = [np.zeros(t.shape, t.dtype) for t in dec.fn.in_types]
+    cache_dir = tempfile.mkdtemp(prefix="repro-autotune-bench-")
+    try:
+        opts = CompileOptions(cache_dir=cache_dir)
+        be = Backend.create("jax", fresh=True)
+        static = be.compile(dec.fn, opts)
+        t_static = _timeit(lambda: static(*args))
+        emit("E11_autotune", "static_step_ms", t_static * 1e3, "ms")
+
+        t0 = time.perf_counter()
+        tuned = be.compile(dec.fn, opts.replace(autotune=True))
+        emit("E11_autotune", "sweep_s", time.perf_counter() - t0, "s")
+        t_tuned = _timeit(lambda: tuned(*args))
+        emit("E11_autotune", "tuned_step_ms", t_tuned * 1e3, "ms")
+        emit("E11_autotune", "tuned_over_static_x",
+             t_static / max(t_tuned, 1e-12), "x")
+        emit("E11_autotune", "winner_attn_impl", tuned.options.attn_impl, "")
+        emit("E11_autotune", "winner_attn_chunk", tuned.options.attn_chunk, "")
+        emit("E11_autotune", "winner_use_pallas",
+             int(tuned.options.use_pallas), "bool")
+        emit("E11_autotune", "sweeps_first_run",
+             be.cache_stats().autotune_sweeps, "")
+
+        # second consumer (fresh backend, same cache dir): the record is
+        # reused — zero sweep timings — and the rebuilt graph's compile is
+        # a *disk* hit, i.e. the pass pipeline never re-runs
+        dec2 = build_graphs(cfg, ShapeConfig("decode", "decode", total, B), B)
+        be2 = Backend.create("jax", fresh=True)
+        t0 = time.perf_counter()
+        tuned2 = be2.compile(dec2.fn, opts.replace(autotune=True))
+        emit("E11_autotune", "reresolve_s", time.perf_counter() - t0, "s")
+        st = be2.cache_stats()
+        assert st.autotune_sweeps == 0, "tuning record was not reused"
+        assert st.autotune_hits == 1
+        assert tuned2.options.attn_impl == tuned.options.attn_impl
+        emit("E11_autotune", "sweeps_second_run", st.autotune_sweeps, "")
+        emit("E11_autotune", "disk_hits_second_run", st.disk_hits, "")
+        emit("E11_autotune", "pipeline_skipped_second_run",
+             int(tuned2.from_disk), "bool")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+
 def bench_serving():
     """E10: the serving hot loop — lockstep host-round-trip baseline vs
     donated device-resident decode vs continuous batching (ServeEngine).
@@ -417,6 +480,7 @@ SECTIONS = {
     "collectives": bench_collectives,
     "compile_cache": bench_compile_cache,
     "serving": bench_serving,
+    "autotune": bench_autotune,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,
 }

@@ -8,7 +8,13 @@ so the perf trajectory is tracked in-repo across PRs.
 committed snapshot's format without running anything (used by CI): the
 schema must parse, the serving section must contain lockstep/donated/
 continuous tok/s rows with positive values, and the donated speedup row
-must be present.
+must be present.  Every failure is a readable ``CHECK FAIL`` line naming
+what is missing vs what is present (hand-edited snapshots must produce a
+diff, never a bare traceback), and the exit code is non-zero.
+
+``--autotune-dir DIR`` additionally validates every autotune tuning
+record under ``DIR`` against the repro.backend.autotune schema (CI runs
+this over the compile-cache artifact).
 """
 from __future__ import annotations
 
@@ -33,6 +39,10 @@ def snapshot(sections, out_path: str) -> dict:
     sys.path.insert(0, REPO)
     from benchmarks import run as bench
 
+    unknown = [s for s in sections if s not in bench.SECTIONS]
+    if unknown:
+        raise SystemExit(f"unknown sections {unknown}; "
+                         f"available: {sorted(bench.SECTIONS)}")
     bench.ROWS.clear()
     for name in sections:
         bench.SECTIONS[name]()
@@ -59,39 +69,100 @@ def _git_rev() -> str:
         return "unknown"
 
 
+ROW_REQUIRED_KEYS = ("section", "name", "value", "unit")
+TOP_REQUIRED_KEYS = ("schema_version", "sections", "rows")
+
+
 def check(path: str) -> int:
-    with open(path) as fh:
-        doc = json.load(fh)
+    """Validate a snapshot; every problem is one readable line.
+
+    Hand-edited snapshots routinely drop keys — each failure names the
+    missing keys *and* what the document/row actually has (a diff, not a
+    KeyError traceback) and the exit code is 1."""
     errors = []
-    if doc.get("schema_version") != SCHEMA_VERSION:
-        errors.append(f"schema_version != {SCHEMA_VERSION}")
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except FileNotFoundError:
+        errors.append(f"no such file: {path}")
+        doc = {}
+    except json.JSONDecodeError as exc:
+        errors.append(f"not valid JSON: {exc}")
+        doc = {}
+    if not isinstance(doc, dict):
+        errors.append(f"top level must be an object, "
+                      f"got {type(doc).__name__}")
+        doc = {}
+    missing_top = [k for k in TOP_REQUIRED_KEYS if k not in doc]
+    if missing_top:
+        errors.append(f"missing top-level keys {missing_top}; "
+                      f"present: {sorted(doc)}")
+    if "schema_version" in doc and doc["schema_version"] != SCHEMA_VERSION:
+        errors.append(f"schema_version {doc['schema_version']!r} != "
+                      f"{SCHEMA_VERSION}")
     rows = doc.get("rows")
-    if not isinstance(rows, list) or not rows:
+    if rows is not None and (not isinstance(rows, list) or not rows):
         errors.append("rows must be a non-empty list")
-        rows = []
+        rows = None
+    rows = rows or []
     by_name = {}
-    for r in rows:
-        missing = {"section", "name", "value", "unit"} - set(r)
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict):
+            errors.append(f"rows[{i}] must be an object with keys "
+                          f"{list(ROW_REQUIRED_KEYS)}, "
+                          f"got {type(r).__name__}: {r!r}")
+            continue
+        missing = [k for k in ROW_REQUIRED_KEYS if k not in r]
         if missing:
-            errors.append(f"row {r} missing keys {sorted(missing)}")
+            errors.append(f"rows[{i}] missing keys {missing}; "
+                          f"present: {sorted(r)}")
             continue
         by_name[(r["section"], r["name"])] = r["value"]
-    if "serving" in doc.get("sections", []):
+    if "serving" in (doc.get("sections") or []):
+        present = sorted(n for s, n in by_name if s == "E10_serving")
         for name in REQUIRED_SERVING_ROWS:
             v = by_name.get(("E10_serving", name))
             if v is None:
-                errors.append(f"serving row missing: {name}")
+                errors.append(f"serving row missing: {name!r} "
+                              f"(E10_serving rows present: {present})")
             else:
                 try:
                     if float(v) <= 0:
                         errors.append(f"serving row {name} not positive: {v}")
-                except ValueError:
-                    errors.append(f"serving row {name} not numeric: {v}")
+                except (TypeError, ValueError):
+                    errors.append(f"serving row {name} not numeric: {v!r}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
         return 1
     print(f"{path}: ok ({len(rows)} rows, commit {doc.get('commit')})")
+    return 0
+
+
+def check_autotune_dir(tune_dir: str) -> int:
+    """Validate every tuning record under ``tune_dir`` (the cache's
+    ``autotune/`` directory, or any directory of ``*.tune.json``)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.backend import autotune
+
+    paths = []
+    for dirpath, _, filenames in os.walk(tune_dir):
+        paths += [os.path.join(dirpath, f) for f in sorted(filenames)
+                  if f.endswith(".tune.json")]
+    errors = []
+    for p in paths:
+        try:
+            with open(p) as fh:
+                rec = json.load(fh)
+        except (OSError, json.JSONDecodeError) as exc:
+            errors.append(f"{p}: unreadable: {exc}")
+            continue
+        errors += [f"{p}: {e}" for e in autotune.validate_record(rec)]
+    if errors:
+        for e in errors:
+            print(f"CHECK FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"{tune_dir}: {len(paths)} autotune records ok")
     return 0
 
 
@@ -101,9 +172,15 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")
+    ap.add_argument("--autotune-dir", metavar="DIR",
+                    help="with --check: also validate autotune records "
+                         "under DIR (missing DIR = nothing to validate)")
     args = ap.parse_args(argv)
     if args.check:
-        return check(args.check)
+        rc = check(args.check)
+        if args.autotune_dir and os.path.isdir(args.autotune_dir):
+            rc = check_autotune_dir(args.autotune_dir) or rc
+        return rc
     snapshot(args.sections, args.out)
     return 0
 

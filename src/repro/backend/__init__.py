@@ -17,6 +17,7 @@ shim over this module and will be removed after one release.
 from .base import (Backend, CacheStats, available_backends,  # noqa: F401
                    register_backend)
 from .compiled import CompiledFunction  # noqa: F401
+from .diskcache import DiskCompileCache  # noqa: F401
 from .options import CompileOptions, OptionsError  # noqa: F401
 from . import interpreter as _interpreter  # noqa: F401  (registers itself)
 

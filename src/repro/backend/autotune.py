@@ -1,0 +1,268 @@
+"""Attention autotuner: sweep attn_impl/attn_chunk/use_pallas, remember.
+
+TVM-style "record the schedule choice" scaled to this repo's knob space:
+``Backend.compile(fn, CompileOptions(autotune=True))`` calls
+:func:`resolve`, which returns *concrete* options — from a persisted
+tuning record when one exists for this (backend, shape-signature,
+versions), else by compiling and timing a small candidate grid and
+persisting the winner into the disk cache (``<cache_dir>/autotune/``).
+The second process to compile the same graph performs zero sweep timings.
+
+A sweep always times the statically-resolved default as candidate 0, so
+the recorded winner is by construction no slower than the default on the
+machine that tuned it.  Records are keyed on jax+repro versions like
+compile entries: a toolchain bump re-tunes instead of trusting stale
+timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.function import Function
+from . import diskcache
+from .options import CompileOptions, _stable_token, _UNSTABLE
+
+SCHEMA = "repro-autotune-v1"
+SWEEP_REPS = 3          # timed calls per candidate (after one warmup call)
+CHUNK_CANDIDATES = (256, 1024)
+
+# the knobs the tuner owns; everything else is identity (part of the key)
+TUNED_FIELDS = ("attn_impl", "attn_chunk", "use_pallas")
+
+# record schema, shared with scripts/bench_to_json.py --check validation
+RECORD_REQUIRED_KEYS = ("format", "schema", "backend", "signature",
+                        "candidates", "winner", "versions")
+CANDIDATE_REQUIRED_KEYS = TUNED_FIELDS + ("ms",)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    key: Optional[str]            # record key (None: options not stable)
+    candidates: List[Dict]        # [{attn_impl, attn_chunk, use_pallas, ms}]
+    winner: Dict                  # the fastest candidate's knobs
+    swept: bool                   # False when a record was reused
+
+
+def tune_key(backend, fn: Function, options: CompileOptions,
+             signature: Optional[str] = None) -> Optional[str]:
+    """Record key: everything that invalidates a timing, minus the tuned
+    knobs themselves (records must be found regardless of the requested
+    starting point)."""
+    toks = []
+    for f in dataclasses.fields(options):
+        if f.name in TUNED_FIELDS or f.name in CompileOptions._NON_IDENTITY:
+            continue
+        t = _stable_token(getattr(options, f.name))
+        if t is _UNSTABLE:
+            return None
+        toks.append((f.name, t))
+    opts_tok = _stable_token(tuple(sorted(backend.backend_opts.items())))
+    if opts_tok is _UNSTABLE:
+        return None
+    doc = (SCHEMA, backend.name, signature or fn.signature(), tuple(toks),
+           opts_tok, tuple(sorted(diskcache._versions().items())),
+           options.level or backend.default_level)
+    return hashlib.sha256(repr(doc).encode()).hexdigest()
+
+
+def has_attention(fn: Function) -> bool:
+    """True if the graph executes any Attention node — including inside
+    nested Functions (Scan bodies carry the per-layer attention)."""
+    for n in fn.nodes():
+        if n.op == "Attention":
+            return True
+        for v in n.attrs.values():
+            if isinstance(v, Function) and has_attention(v):
+                return True
+            if isinstance(v, (tuple, list)) and any(
+                    isinstance(x, Function) and has_attention(x) for x in v):
+                return True
+    return False
+
+
+def candidate_grid(options: CompileOptions) -> List[Dict]:
+    """The sweep grid.  Candidate 0 is always the request as-given (the
+    static default), so the winner can never regress it."""
+    seen = set()
+    grid: List[Dict] = []
+
+    def add(impl: str, chunk: int, pallas: bool):
+        key = (impl, chunk, pallas)
+        if key not in seen:
+            seen.add(key)
+            grid.append({"attn_impl": impl, "attn_chunk": chunk,
+                         "use_pallas": pallas})
+
+    add(options.attn_impl, options.attn_chunk, options.use_pallas)
+    add("naive", options.attn_chunk, options.use_pallas)
+    for c in sorted({options.attn_chunk, *CHUNK_CANDIDATES}):
+        add("chunked", c, options.use_pallas)
+    # one use_pallas flip of the request: times the kernel-vs-XLA choice
+    # without crossing it with every impl
+    add(options.attn_impl, options.attn_chunk, not options.use_pallas)
+    return grid
+
+
+def resolve(backend, fn: Function,
+            options: CompileOptions) -> CompileOptions:
+    """Concrete options for ``fn``: record lookup, else sweep + persist.
+
+    Called by ``Backend.compile`` when ``options.autotune`` is set; the
+    returned options always have ``autotune=False`` (they are the
+    resolution, not another request)."""
+    static = options.replace(autotune=False)
+    if not has_attention(fn):
+        return static  # nothing to tune
+    sig = fn.signature()
+    key = tune_key(backend, fn, options, signature=sig)
+    # Options carrying opaque objects (mesh/shardings) have key=None and
+    # can never persist — but a repeated compile in one process must still
+    # not re-pay the sweep, so everything memoizes in-process too.
+    mem_key = key if key is not None else (
+        "mem", sig, static.cache_key(),
+        options.level or backend.default_level)
+    rec = _load_record(backend, options, key, mem_key)
+    if rec is not None:
+        backend.autotune_hits += 1
+        return static.replace(**_knobs(rec["winner"]))
+    result = sweep(backend, fn, static, key=key)
+    backend.autotune_sweeps += 1
+    _store_record(backend, fn, options, result, mem_key)
+    _drop_loser_entries(backend, fn, static, result, signature=sig)
+    return static.replace(**_knobs(result.winner))
+
+
+def sweep(backend, fn: Function, static: CompileOptions,
+          key: Optional[str] = None, reps: int = SWEEP_REPS) -> SweepResult:
+    """Compile + time every candidate; fastest mean wall time wins.
+
+    Candidates that fail to compile or run (e.g. a chunk size the shapes
+    reject) are skipped — candidate 0 (the static default) always runs, so
+    the sweep cannot come back empty."""
+    args = [np.zeros(t.shape, t.dtype) for t in fn.in_types]
+    timed: List[Dict] = []
+    for cand in candidate_grid(static):
+        try:
+            cf = backend.compile(fn, static.replace(**cand))
+            cf(*args)  # warmup: XLA compile + first dispatch
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                cf(*args)  # numpy convention: host round-trip syncs
+            ms = (time.perf_counter() - t0) / reps * 1e3
+        except Exception:
+            if not timed:
+                raise  # the static default must be runnable
+            continue
+        timed.append({**cand, "ms": ms})
+    winner = min(timed, key=lambda c: c["ms"])
+    return SweepResult(key=key, candidates=timed, winner=_knobs(winner),
+                       swept=True)
+
+
+def _knobs(doc: Dict) -> Dict:
+    return {k: doc[k] for k in TUNED_FIELDS}
+
+
+def record_doc(backend, fn: Function, result: SweepResult) -> Dict:
+    return {
+        "format": diskcache.ENTRY_FORMAT,
+        "schema": SCHEMA,
+        "backend": backend.name,
+        "signature": fn.signature(),
+        "key": result.key,
+        "candidates": result.candidates,
+        "winner": result.winner,
+        "versions": diskcache._versions(),
+    }
+
+
+def validate_record(rec: Dict) -> List[str]:
+    """Schema errors for one tuning record ([] = valid).  Shared with
+    ``scripts/bench_to_json.py --check``."""
+    errors = []
+    if not isinstance(rec, dict):
+        return [f"record must be an object, got {type(rec).__name__}"]
+    for k in RECORD_REQUIRED_KEYS:
+        if k not in rec:
+            errors.append(f"missing key {k!r}")
+    if rec.get("schema") not in (None, SCHEMA):
+        errors.append(f"schema {rec['schema']!r} != {SCHEMA!r}")
+    cands = rec.get("candidates")
+    if cands is not None:
+        if not isinstance(cands, list) or not cands:
+            errors.append("candidates must be a non-empty list")
+        else:
+            for i, c in enumerate(cands):
+                if not isinstance(c, dict):
+                    errors.append(f"candidates[{i}] must be an object")
+                    continue
+                for k in CANDIDATE_REQUIRED_KEYS:
+                    if k not in c:
+                        errors.append(f"candidates[{i}] missing {k!r}")
+                ms = c.get("ms")
+                if ms is not None and (
+                        not isinstance(ms, (int, float)) or ms < 0):
+                    errors.append(f"candidates[{i}].ms not a time: {ms!r}")
+    win = rec.get("winner")
+    if win is not None:
+        if not isinstance(win, dict):
+            errors.append("winner must be an object")
+        else:
+            for k in TUNED_FIELDS:
+                if k not in win:
+                    errors.append(f"winner missing {k!r}")
+    return errors
+
+
+def _drop_loser_entries(backend, fn: Function, static: CompileOptions,
+                        result: SweepResult, signature: str) -> None:
+    """Remove the losing candidates' disk entries after a sweep.
+
+    Sweep compiles go through the normal ``Backend.compile`` path, so
+    every candidate persisted a full entry — but only the winner's is ever
+    addressed again; the rest would squat on LRU budget until evicted."""
+    disk = backend._disk_for(static)
+    if disk is None:
+        return
+    level = static.level or backend.default_level
+    params = tuple(p.name for p in fn.parameters)
+    for cand in result.candidates:
+        knobs = _knobs(cand)
+        if knobs == result.winner:
+            continue
+        dkey = diskcache.entry_key(signature, params, level,
+                                   static.replace(**knobs), backend.name,
+                                   backend.backend_opts)
+        if dkey is not None:
+            disk._remove(disk._entry_path(dkey))
+
+
+# -- persistence --------------------------------------------------------------
+def _load_record(backend, options: CompileOptions, key: Optional[str],
+                 mem_key) -> Optional[Dict]:
+    rec = backend._autotune_mem.get(mem_key)
+    if rec is not None:
+        return rec
+    if key is None:
+        return None
+    disk = backend._disk_for(options)
+    if disk is not None:
+        rec = disk.load_tuning(key)
+        if rec is not None and not validate_record(rec):
+            return rec
+    return None
+
+
+def _store_record(backend, fn: Function, options: CompileOptions,
+                  result: SweepResult, mem_key) -> None:
+    rec = record_doc(backend, fn, result)
+    backend._autotune_mem[mem_key] = rec
+    if result.key is not None:
+        disk = backend._disk_for(options)
+        if disk is not None:
+            disk.store_tuning(result.key, rec)

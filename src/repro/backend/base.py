@@ -24,6 +24,13 @@ class CacheStats:
     hits: int
     misses: int
     size: int
+    # persistent (on-disk) layer — zero when no cache_dir is configured
+    disk_hits: int = 0
+    disk_misses: int = 0
+    disk_evictions: int = 0
+    # autotuner — reused records vs fresh sweeps
+    autotune_hits: int = 0
+    autotune_sweeps: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -48,6 +55,10 @@ class Backend:
         self._lock = threading.Lock()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.autotune_hits = 0
+        self.autotune_sweeps = 0
+        self._autotune_mem: Dict[Any, Dict] = {}  # tuning records, in-process
+        self._disk_caches: Dict[Tuple, Any] = {}  # (dir, budget) -> cache
 
     # -- registry / construction --------------------------------------------
     _REGISTRY: Dict[str, Type["Backend"]] = {}
@@ -90,7 +101,16 @@ class Backend:
         parameter names (named-parameter calling must keep working on a
         hit), the *resolved* opt level, and the options.  Concurrent
         compiles of the same key are deduplicated: one thread builds, the
-        rest wait and receive the same executable."""
+        rest wait and receive the same executable.
+
+        ``options.autotune=True`` first resolves the attention knobs via
+        :mod:`repro.backend.autotune` (cached tuning record, else a sweep),
+        then compiles with the concrete winner.  When a cache dir is
+        configured (``options.cache_dir`` or ``$REPRO_CACHE_DIR``) an
+        in-memory miss consults :class:`~repro.backend.diskcache.
+        DiskCompileCache` before running the pass pipeline: a disk hit
+        rehydrates the optimized graph + PipelineReport + metadata and only
+        re-runs backend codegen (or reloads an AOT-serialized executable)."""
         if options is None:
             options = CompileOptions()
         if not isinstance(options, CompileOptions):
@@ -104,6 +124,9 @@ class Backend:
             raise OptionsError(
                 f"donate_argnums {bad} out of range for {fn.name} "
                 f"({n_params} parameters)")
+        if options.autotune:
+            from . import autotune as _autotune
+            options = _autotune.resolve(self, fn, options)
         level = options.level or self.default_level
         key = (fn.signature(), tuple(p.name for p in fn.parameters),
                level, options.cache_key())
@@ -119,12 +142,7 @@ class Backend:
                     break  # this thread builds
             waiter.wait()  # another thread is building this key; retry
         try:
-            opt_fn, report = run_pipeline(
-                fn, level, compress_grads=options.compress_grads)
-            call, raw, lower = self._codegen(opt_fn, options)
-            compiled = CompiledFunction(
-                opt_fn, call, backend=self.name, options=options,
-                report=report, signature=key[0], raw=raw, lower=lower)
+            compiled = self._build(fn, options, level, key)
             with self._lock:
                 self.cache_misses += 1
                 self._cache[key] = compiled
@@ -132,6 +150,98 @@ class Backend:
         finally:
             with self._lock:
                 self._inflight.pop(key).set()
+
+    def _build(self, fn: Function, options: CompileOptions, level: str,
+               key: Tuple) -> CompiledFunction:
+        """Build one executable: disk-cache rehydrate, else full pipeline."""
+        from . import diskcache
+        disk = self._disk_for(options)
+        dkey = None
+        if disk is not None:
+            dkey = diskcache.entry_key(key[0], key[1], level, options,
+                                       self.name, self.backend_opts)
+        if dkey is not None:
+            entry = disk.load(dkey)
+            if entry is not None:
+                hydrated = self._from_entry(entry, options, key[0])
+                if hydrated is not None:
+                    return hydrated
+                # the entry read fine but wouldn't hydrate (e.g. alien
+                # graph rejected by codegen) — the full pipeline runs, so
+                # reporting a disk hit would let warm-start CI gates pass
+                # on a run that re-paid everything
+                disk.hits -= 1
+                disk.misses += 1
+        opt_fn, report = run_pipeline(
+            fn, level, compress_grads=options.compress_grads)
+        call, raw, lower = self._codegen(opt_fn, options)
+        compiled = CompiledFunction(
+            opt_fn, call, backend=self.name, options=options,
+            report=report, signature=key[0], raw=raw, lower=lower)
+        if dkey is not None:
+            disk.store(
+                dkey, fn=opt_fn, report=report, level=level,
+                backend_name=self.name, options=options,
+                memory_plan=compiled.memory_plan, cost=compiled.cost,
+                executable=self._export_executable(compiled, options))
+        return compiled
+
+    def _from_entry(self, entry: Dict, options: CompileOptions,
+                    signature: str) -> Optional[CompiledFunction]:
+        """Rehydrate a disk entry: codegen the stored *optimized* graph
+        (the pipeline is skipped — that's the point), preferring the AOT
+        executable when the backend can load one."""
+        opt_fn = entry["function"]
+        loaded = None
+        if entry.get("executable"):
+            loaded = self._load_executable(entry["executable"], opt_fn,
+                                           options)
+        if loaded is None:
+            try:
+                loaded = self._codegen(opt_fn, options)
+            except Exception:
+                return None  # alien graph; fall back to a full build
+        call, raw, lower = loaded
+        # memory plan stays lazy: the stored totals are introspection-only
+        # (cache_tool), and a plan without its buffer assignments would
+        # silently disable the interpreter's arena mode — recomputing from
+        # the rehydrated graph gives the identical full plan
+        cost = None
+        if entry.get("cost"):
+            from ..core.cost import Cost
+            c = entry["cost"]
+            cost = Cost(flops=float(c["flops"]), bytes=float(c["bytes"]),
+                        by_op=c.get("by_op"))
+        return CompiledFunction(
+            opt_fn, call, backend=self.name, options=options,
+            report=entry["report"], signature=signature, raw=raw,
+            lower=lower, cost=cost, from_disk=True)
+
+    # -- persistence hooks ---------------------------------------------------
+    def _disk_for(self, options: CompileOptions):
+        """The DiskCompileCache for these options, or None (disabled)."""
+        from . import diskcache
+        root = diskcache.resolve_dir(options)
+        if root is None:
+            return None
+        budget = diskcache.resolve_budget(options)
+        with self._lock:
+            dc = self._disk_caches.get((root, budget))
+            if dc is None:
+                dc = diskcache.DiskCompileCache(root, budget)
+                self._disk_caches[(root, budget)] = dc
+        return dc
+
+    def _export_executable(self, compiled: CompiledFunction,
+                           options: CompileOptions) -> Optional[bytes]:
+        """AOT-serialize ``compiled`` for the disk cache (None = can't)."""
+        return None
+
+    def _load_executable(self, data: bytes, fn: Function,
+                         options: CompileOptions):
+        """Inverse of :meth:`_export_executable`; None falls back to
+        re-running codegen on the deserialized graph."""
+        return None
 
     def _codegen(self, fn: Function, options: CompileOptions
                  ) -> Tuple[Callable, Optional[Callable], Optional[Callable]]:
@@ -145,14 +255,25 @@ class Backend:
     # -- cache introspection -------------------------------------------------
     def cache_stats(self) -> CacheStats:
         with self._lock:
-            return CacheStats(self.cache_hits, self.cache_misses,
-                              len(self._cache))
+            disks = list(self._disk_caches.values())
+            return CacheStats(
+                self.cache_hits, self.cache_misses, len(self._cache),
+                disk_hits=sum(d.hits for d in disks),
+                disk_misses=sum(d.misses for d in disks),
+                disk_evictions=sum(d.evictions for d in disks),
+                autotune_hits=self.autotune_hits,
+                autotune_sweeps=self.autotune_sweeps)
 
     def clear_cache(self) -> None:
+        """Reset the in-memory cache and counters (disk entries persist —
+        that is their job; use DiskCompileCache.clear/cache_tool.py)."""
         with self._lock:
             self._cache.clear()
             self.cache_hits = 0
             self.cache_misses = 0
+            self.autotune_hits = 0
+            self.autotune_sweeps = 0
+            self._disk_caches.clear()
 
 
 def register_backend(backend_cls: Type[Backend]) -> Type[Backend]:

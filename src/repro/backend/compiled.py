@@ -38,17 +38,23 @@ class CompiledFunction:
         signature: str,
         raw: Optional[Callable] = None,
         lower: Optional[Callable] = None,
+        memory_plan=None,
+        cost=None,
+        from_disk: bool = False,
     ):
         self.function = fn
         self.backend = backend
         self.options = options
         self.report = report
         self.signature = signature
+        self.from_disk = from_disk  # hydrated from the persistent cache
         self._call = call
         self._raw = raw if raw is not None else call
         self._lower = lower
-        self._memory_plan = None
-        self._cost = None
+        # a disk hit arrives with the plan/cost already computed (they were
+        # persisted alongside the graph); cold compiles stay lazy
+        self._memory_plan = memory_plan
+        self._cost = cost
         # NOTE: instances are shared process-wide via the backend compile
         # cache, so timing hooks are additive — setting would let one
         # caller silently unhook another's.

@@ -16,7 +16,12 @@ from .options import CompileOptions
 
 @register_backend
 class InterpreterBackend(Backend):
-    """Pure-numpy reference executor (with optional planned-arena mode)."""
+    """Pure-numpy reference executor (with optional planned-arena mode).
+
+    Participates in the persistent disk cache like any backend (the
+    stored optimized graph + PipelineReport skip the pipeline on a cold
+    process) but has no AOT executable format — rehydration re-enters
+    :meth:`_codegen`, which is just a closure over ``evaluate``."""
 
     name = "interpreter"
     default_level = "O0"

@@ -49,3 +49,53 @@ class JaxBackend(Backend):
             return [np.asarray(o) for o in run(*args)]
 
         return call, run, lower
+
+    # -- persistent-cache AOT hooks ------------------------------------------
+    @staticmethod
+    def _exportable(options: CompileOptions) -> bool:
+        """AOT serialization covers the plain single-device jit path only:
+        meshes/shardings don't rehydrate portably, and an exported module
+        drops donation (a donated hot loop must re-jit from the graph)."""
+        return (options.static_jit and options.mode == "jit"
+                and options.mesh is None and options.in_shardings is None
+                and options.out_shardings is None
+                and not options.donate_argnums)
+
+    def _export_executable(self, compiled, options: CompileOptions
+                           ) -> Optional[bytes]:
+        if not self._exportable(options):
+            return None
+        try:
+            import jax
+            from jax import export as jexport
+
+            specs = [jax.ShapeDtypeStruct(t.shape, np.dtype(t.dtype))
+                     for t in compiled.function.in_types]
+            return jexport.export(compiled.raw)(*specs).serialize()
+        except Exception:
+            return None  # best-effort: the graph entry alone is still a win
+
+    def _load_executable(self, data: bytes, fn: Function,
+                         options: CompileOptions):
+        if not self._exportable(options):
+            return None
+        try:
+            import jax
+            from jax import export as jexport
+
+            exported = jexport.deserialize(bytearray(data))
+            # a blob lowered on another platform (cache dir shared between
+            # a GPU box and a CPU CI runner) would only fail at first call,
+            # inside the serve loop — reject it here and fall back to
+            # re-emitting from the stored graph instead
+            platforms = {p.lower() for p in exported.platforms}
+            if jax.default_backend().lower() not in platforms:
+                return None
+            run = jax.jit(exported.call)
+
+            def call(*args):
+                return [np.asarray(o) for o in run(*args)]
+
+            return call, run, run.lower
+        except Exception:
+            return None  # stale/alien blob: re-emit from the stored graph

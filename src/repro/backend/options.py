@@ -50,6 +50,12 @@ class CompileOptions:
     # interpreter
     arena: Any = None                    # MemoryPlan | True (plan one) | None
 
+    # persistence / tuning (NOT part of the executable's identity: they say
+    # where artifacts live and how knobs get resolved, never what runs)
+    cache_dir: Optional[str] = None      # on-disk compile cache root
+    cache_budget_bytes: Optional[int] = None  # LRU eviction budget
+    autotune: bool = False               # resolve attn knobs via the tuner
+
     def __post_init__(self):
         if self.level is not None and self.level not in _LEVELS:
             raise OptionsError(
@@ -75,6 +81,20 @@ class CompileOptions:
                 f"donate_argnums must be a sequence of ints, "
                 f"got {self.donate_argnums!r}") from None
         object.__setattr__(self, "donate_argnums", donate)
+        if self.cache_dir is not None and not isinstance(self.cache_dir, str):
+            raise OptionsError(
+                f"cache_dir must be a str or None, got {self.cache_dir!r}")
+        if self.cache_budget_bytes is not None and (
+                not isinstance(self.cache_budget_bytes, int)
+                or self.cache_budget_bytes <= 0):
+            raise OptionsError(
+                f"cache_budget_bytes must be a positive int or None, "
+                f"got {self.cache_budget_bytes!r}")
+
+    # fields that never participate in cache keys: `level` keys by its
+    # *resolved* value, and the persistence/tuning knobs affect where
+    # artifacts are stored (or how knobs are picked), not what executes.
+    _NON_IDENTITY = ("level", "cache_dir", "cache_budget_bytes", "autotune")
 
     # -- compile-cache keying ------------------------------------------------
     def cache_key(self) -> Tuple:
@@ -84,9 +104,28 @@ class CompileOptions:
         memory plans) key by identity — a distinct object is a cache miss,
         never a false hit.  ``level`` is excluded: the backend keys on the
         *resolved* level, so ``level=None`` and an explicit
-        ``level=<backend default>`` share an executable."""
+        ``level=<backend default>`` share an executable.  ``cache_dir``/
+        ``cache_budget_bytes``/``autotune`` are excluded too (see
+        ``_NON_IDENTITY``)."""
         return tuple((f.name, _token(getattr(self, f.name)))
-                     for f in dataclasses.fields(self) if f.name != "level")
+                     for f in dataclasses.fields(self)
+                     if f.name not in self._NON_IDENTITY)
+
+    def stable_token(self) -> Optional[Tuple]:
+        """Like :meth:`cache_key` but process-stable, for the *disk* cache.
+
+        Opaque objects (meshes, shardings, memory plans) key by ``id()``
+        in-process, which is meaningless across processes — options
+        carrying any return ``None``, meaning "not disk-cacheable"."""
+        out = []
+        for f in dataclasses.fields(self):
+            if f.name in self._NON_IDENTITY:
+                continue
+            tok = _stable_token(getattr(self, f.name))
+            if tok is _UNSTABLE:
+                return None
+            out.append((f.name, tok))
+        return tuple(out)
 
     def replace(self, **changes) -> "CompileOptions":
         return dataclasses.replace(self, **changes)
@@ -106,3 +145,17 @@ def _token(v: Any):
     if isinstance(v, (tuple, list)):
         return (type(v).__name__,) + tuple(_token(x) for x in v)
     return ("obj", type(v).__name__, id(v))
+
+
+_UNSTABLE = object()
+
+
+def _stable_token(v: Any):
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (tuple, list)):
+        toks = tuple(_stable_token(x) for x in v)
+        if any(t is _UNSTABLE for t in toks):
+            return _UNSTABLE
+        return (type(v).__name__,) + toks
+    return _UNSTABLE

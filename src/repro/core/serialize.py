@@ -136,6 +136,22 @@ def signature(fn: Function) -> str:
     return hashlib.sha256(repr(doc).encode()).hexdigest()
 
 
+# Bumped whenever the encoding above changes shape: persisted graph docs
+# (e.g. repro.backend.diskcache entries) embed it so a stale on-disk
+# artifact is an explicit invalidation, never a mis-decode.
+FORMAT_VERSION = 1
+
+
+def to_doc(fn: Function) -> Dict:
+    """Encode ``fn`` as a JSON-ready dict (the persistence format)."""
+    return _encode_function(fn)
+
+
+def from_doc(doc: Dict) -> Function:
+    """Decode a :func:`to_doc` dict back into a Function."""
+    return _decode_function(doc)
+
+
 def dumps(fn: Function) -> str:
     return json.dumps(_encode_function(fn))
 

@@ -195,6 +195,13 @@ class ServeEngine:
                  mode: str = "continuous", seed: int = 0,
                  backend: str = "jax",
                  options: Optional[CompileOptions] = None):
+        """Every graph the engine compiles (serve/decode step, per-length
+        prefills, fused donated chunks) goes through ``options`` — so
+        ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
+        process a persistent warm-start compile cache and recorded
+        attention tuning; a restarted engine skips the pass pipeline for
+        every graph whose structural signature is unchanged (see
+        :meth:`cache_stats` disk counters)."""
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if mode != "lockstep" and cfg.family != "dense":
@@ -532,6 +539,11 @@ class ServeEngine:
             return caches
         import jax.numpy as jnp
         return [jnp.asarray(c) for c in caches]
+
+    def cache_stats(self):
+        """The engine backend's compile-cache counters (memory + disk +
+        autotune) — the serving-smoke CI step asserts on these."""
+        return self.backend.cache_stats()
 
     # -- driving -------------------------------------------------------------
     def run(self) -> EngineReport:

@@ -33,8 +33,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("lockstep", "donated", "continuous"))
     ap.add_argument("--smoke", action="store_true",
                     help="assert tok/s > 0 and pool stats are sane")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile-cache dir (default: "
+                         "$REPRO_CACHE_DIR if set, else disabled)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve attn_impl/attn_chunk via the autotuner "
+                         "(record persisted into --cache-dir)")
+    ap.add_argument("--min-disk-hits", type=int, default=None, metavar="N",
+                    help="assert >= N persistent-cache disk hits (CI: the "
+                         "second run of an unchanged graph must warm-start)")
     args = ap.parse_args(argv)
 
+    from ..backend import CompileOptions
     from ..configs import get_config
     from .engine import ServeEngine
 
@@ -49,8 +59,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"[serve] {cfg.name} ({cfg.family}): no serve/chunk graphs "
               f"yet, falling back to --mode lockstep")
         mode = "lockstep"
+    options = CompileOptions(cache_dir=args.cache_dir,
+                             autotune=args.autotune)
     engine = ServeEngine(cfg, slots=args.batch, max_len=P + G,
-                         mode=mode, seed=args.seed)
+                         mode=mode, seed=args.seed, options=options)
     rng = np.random.default_rng(args.seed)
     rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G)
             for _ in range(n_req)]
@@ -67,8 +79,12 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"total={p.total_bytes} allocs={p.allocs} frees={p.frees} "
               f"peak_active={p.peak_active} "
               f"arena={p.decode_arena_bytes}B")
-    st = engine.backend.cache_stats()
-    print(f"[compile-cache] hits={st.hits} misses={st.misses} size={st.size}")
+    st = engine.cache_stats()
+    print(f"[compile-cache] hits={st.hits} misses={st.misses} size={st.size} "
+          f"disk_hits={st.disk_hits} disk_misses={st.disk_misses} "
+          f"disk_evictions={st.disk_evictions} "
+          f"autotune_hits={st.autotune_hits} "
+          f"autotune_sweeps={st.autotune_sweeps}")
     for rid in rids[:2]:
         print(f"  req{rid}: {rep.results[rid][:12].tolist()} ...")
 
@@ -84,6 +100,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                 f"allocs/frees must match requests ({p.allocs}/{p.frees})"
             assert p.total_bytes > 0 and p.bytes_per_slot > 0
         print("[smoke] ok")
+    if args.min_disk_hits is not None:
+        assert st.disk_hits >= args.min_disk_hits, (
+            f"expected >= {args.min_disk_hits} persistent-cache disk hits, "
+            f"got {st.disk_hits} (misses={st.disk_misses}) — the warm run "
+            f"did not reuse the on-disk compile cache")
+        if args.autotune:
+            assert st.autotune_sweeps == 0, (
+                f"warm run re-swept {st.autotune_sweeps} graphs — tuning "
+                f"records were not reused")
+        print(f"[disk-cache] ok ({st.disk_hits} hits, "
+              f"{st.autotune_sweeps} sweeps)")
     return 0
 
 

@@ -36,6 +36,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile-cache dir (default: "
+                         "$REPRO_CACHE_DIR if set, else disabled) — a "
+                         "restarted run skips the pass pipeline for the "
+                         "unchanged train-step graph")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve attention knobs via the recorded sweep")
     args = ap.parse_args(argv)
 
     import jax
@@ -62,9 +69,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     n_data = len(b.inputs)
     n_p = len(names)
     donate = tuple(range(n_data + 1, n_data + 1 + 3 * n_p))
-    compiled = Backend.create("jax").compile(
-        ts.fn, CompileOptions(donate_argnums=donate))
+    be = Backend.create("jax")
+    compiled = be.compile(
+        ts.fn, CompileOptions(donate_argnums=donate,
+                              cache_dir=args.cache_dir,
+                              autotune=args.autotune))
     step_fn = compiled.raw  # jax-native callable: donation honored, no copies
+    st = be.cache_stats()
+    if st.disk_hits or st.disk_misses:
+        print(f"[compile-cache] disk_hits={st.disk_hits} "
+              f"disk_misses={st.disk_misses} "
+              f"pipeline {'skipped (warm start)' if compiled.from_disk else 'ran'}")
 
     # -- state: fresh or restored ------------------------------------------------
     mgr = CheckpointManager(args.ckpt_dir, keep=3)

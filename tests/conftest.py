@@ -3,3 +3,9 @@ import sys
 
 # tests run single-device (the dry-run alone uses 512 placeholder devices)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# a developer's ambient persistent compile cache must not leak into test
+# runs: cache-behavior assertions (hit/miss counts, eviction) assume a
+# cold disk unless the test opts in via CompileOptions.cache_dir
+os.environ.pop("REPRO_CACHE_DIR", None)
+os.environ.pop("REPRO_CACHE_BUDGET_BYTES", None)

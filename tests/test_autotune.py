@@ -1,0 +1,176 @@
+"""Attention autotuner: sweep, record persistence + reuse (zero re-sweep),
+winner-no-slower-than-default, and the record schema validation shared
+with scripts/bench_to_json.py --check."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.backend import Backend, CompileOptions
+from repro.backend import autotune
+from repro.core import ops
+from repro.core.function import Function
+
+
+def _attn_graph(S=64, D=32):
+    q = ops.parameter((1, 2, S, D), "f32", "q")
+    k = ops.parameter((1, 2, S, D), "f32", "k")
+    v = ops.parameter((1, 2, S, D), "f32", "v")
+    return Function([q, k, v],
+                    [ops.attention(q.out(), k.out(), v.out(), causal=True)])
+
+
+def _plain_graph():
+    x = ops.parameter((4, 16), "f32", "x")
+    return Function([x], [ops.gelu(x.out())])
+
+
+def test_sweep_records_winner_and_is_reused(tmp_path, monkeypatch):
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    cf = be.compile(_attn_graph(), opts)
+    st = be.cache_stats()
+    assert st.autotune_sweeps == 1 and st.autotune_hits == 0
+    assert cf.options.autotune is False  # resolved, not re-requested
+
+    [rec_path] = glob.glob(os.path.join(str(tmp_path), "autotune",
+                                        "*.tune.json"))
+    with open(rec_path) as fh:
+        rec = json.load(fh)
+    assert autotune.validate_record(rec) == []
+    assert {c["attn_impl"] for c in rec["candidates"]} >= {"naive", "chunked"}
+    # candidate 0 is the static default; the winner can't be slower
+    static_ms = rec["candidates"][0]["ms"]
+    winner_ms = min(c["ms"] for c in rec["candidates"])
+    assert winner_ms <= static_ms
+
+    # a cold process re-resolves from the record: zero sweep timings
+    be2 = Backend.create("jax", fresh=True)
+
+    def boom(*a, **k):
+        raise AssertionError("sweep re-ran despite a persisted record")
+
+    monkeypatch.setattr(autotune, "sweep", boom)
+    cf2 = be2.compile(_attn_graph(), opts)
+    st2 = be2.cache_stats()
+    assert st2.autotune_hits == 1 and st2.autotune_sweeps == 0
+    assert cf2.options.attn_impl == rec["winner"]["attn_impl"]
+    assert cf2.options.attn_chunk == rec["winner"]["attn_chunk"]
+    assert cf2.options.use_pallas == rec["winner"]["use_pallas"]
+
+
+def test_no_attention_graph_skips_the_sweep(tmp_path):
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    cf = be.compile(_plain_graph(), opts)
+    st = be.cache_stats()
+    assert st.autotune_sweeps == 0 and st.autotune_hits == 0
+    assert cf.options.attn_impl == CompileOptions().attn_impl
+    assert not os.path.isdir(os.path.join(str(tmp_path), "autotune"))
+
+
+def test_has_attention_recurses_into_scan_bodies():
+    inner = _attn_graph(S=8, D=4)
+    x = ops.parameter((1, 2, 8, 4), "f32", "x")
+    host = Function([x], [ops.gelu(x.out())])
+    assert autotune.has_attention(inner)
+    assert not autotune.has_attention(host)
+    # nested-function attr (how Scan carries its body)
+    from repro.core.node import Node
+    n = Node("Scan", [x.out()], {"body": inner}, x.out_types)
+    from repro.core.node import Value
+    fn = Function([x], [Value(n, 0)])
+    assert autotune.has_attention(fn)
+
+
+def test_tuner_without_cache_dir_remembers_in_process(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    opts = CompileOptions(autotune=True)
+    be = Backend.create("jax", fresh=True)
+    be.compile(_attn_graph(), opts)
+    assert be.cache_stats().autotune_sweeps == 1
+    be.clear_cache()  # drop the compiled executables, keep tuner memory
+    be.compile(_attn_graph(), opts)
+    st = be.cache_stats()
+    assert st.autotune_sweeps == 0 and st.autotune_hits == 1
+
+
+def test_corrupt_tuning_record_triggers_retune(tmp_path):
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    be.compile(_attn_graph(), opts)
+    [rec_path] = glob.glob(os.path.join(str(tmp_path), "autotune",
+                                        "*.tune.json"))
+    with open(rec_path, "w") as fh:
+        fh.write("{torn")
+    be2 = Backend.create("jax", fresh=True)
+    be2.compile(_attn_graph(), opts)
+    st = be2.cache_stats()
+    assert st.autotune_sweeps == 1 and st.autotune_hits == 0
+    with open(rec_path) as fh:  # re-recorded valid
+        assert autotune.validate_record(json.load(fh)) == []
+
+
+def test_validate_record_reports_schema_errors():
+    assert autotune.validate_record("nope")
+    errs = autotune.validate_record({})
+    assert any("missing key 'winner'" in e for e in errs)
+    rec = {
+        "format": 1, "schema": autotune.SCHEMA, "backend": "jax",
+        "signature": "s", "versions": {},
+        "candidates": [{"attn_impl": "naive", "attn_chunk": 256,
+                        "use_pallas": False}],  # no ms
+        "winner": {"attn_impl": "naive", "attn_chunk": 256},  # no use_pallas
+    }
+    errs = autotune.validate_record(rec)
+    assert any("candidates[0] missing 'ms'" in e for e in errs)
+    assert any("winner missing 'use_pallas'" in e for e in errs)
+    rec["candidates"][0]["ms"] = 0.5
+    rec["winner"]["use_pallas"] = False
+    assert autotune.validate_record(rec) == []
+
+
+def test_sweep_drops_losing_candidates_disk_entries(tmp_path):
+    """Sweep compiles persist through the normal path, but only the
+    winner's entry may stay — losers would squat on LRU budget."""
+    from repro.backend.diskcache import DiskCompileCache
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    be.compile(_attn_graph(), opts)
+    assert DiskCompileCache(str(tmp_path)).stats().entries == 1
+
+
+def test_unstable_options_memoize_the_sweep_in_process(tmp_path):
+    """Opaque options (key=None) can't persist a record, but a repeated
+    compile in one process must not re-pay the sweep."""
+    from repro.core.passes import plan_memory
+    plan = plan_memory(_plain_graph())  # opaque object: not process-stable
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True, arena=plan)
+    assert opts.stable_token() is None
+    be = Backend.create("interpreter", fresh=True)
+    be.compile(_attn_graph(S=8, D=4), opts)
+    assert be.cache_stats().autotune_sweeps == 1
+    be.compile(_attn_graph(S=8, D=4), opts)
+    st = be.cache_stats()
+    assert st.autotune_sweeps == 1 and st.autotune_hits == 1
+
+
+def test_sweep_skips_uncompilable_candidates(monkeypatch):
+    """A candidate the shapes reject is skipped, not fatal — only the
+    static default (candidate 0) is load-bearing."""
+    be = Backend.create("jax", fresh=True)
+    fn = _attn_graph()
+    real_compile = be.compile
+
+    def picky(f, options=None):
+        if options is not None and options.attn_impl == "chunked":
+            raise ValueError("synthetic reject")
+        return real_compile(f, options)
+
+    monkeypatch.setattr(be, "compile", picky)
+    result = autotune.sweep(be, fn, CompileOptions())
+    impls = {c["attn_impl"] for c in result.candidates}
+    assert "chunked" not in impls and "auto" in impls
+    assert result.winner["attn_impl"] in impls

@@ -1,0 +1,76 @@
+"""scripts/bench_to_json.py --check: hand-edited snapshots must produce a
+readable key diff and a non-zero exit, never a bare KeyError traceback;
+--autotune-dir validates tuning records with the shared schema."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(REPO, "scripts", "bench_to_json.py")
+
+
+def _check(*argv):
+    return subprocess.run([sys.executable, SCRIPT, *argv],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+def test_committed_snapshot_is_valid():
+    r = _check("--check", os.path.join(REPO, "BENCH_serve.json"))
+    assert r.returncode == 0, r.stderr
+
+
+@pytest.mark.parametrize("doc, expect", [
+    ({"schema_version": 1}, "missing top-level keys"),
+    ({"schema_version": 1, "sections": ["serving"],
+      "rows": [{"section": "E10_serving", "name": "lockstep_tok_s",
+                "value": "5"}]}, "missing keys ['unit']"),
+    ({"schema_version": 1, "sections": ["serving"],
+      "rows": [["not", "a", "dict"]]}, "rows[0] must be an object"),
+    ({"schema_version": 1, "sections": ["serving"],
+      "rows": [{"section": "E10_serving", "name": "lockstep_tok_s",
+                "value": "oops", "unit": ""}]}, "not numeric"),
+])
+def test_edited_snapshot_fails_with_readable_diff(tmp_path, doc, expect):
+    path = tmp_path / "edited.json"
+    path.write_text(json.dumps(doc))
+    r = _check("--check", str(path))
+    assert r.returncode == 1
+    assert "Traceback" not in r.stderr
+    assert "CHECK FAIL" in r.stderr
+    assert expect in r.stderr
+
+
+def test_unparseable_snapshot_fails_readably(tmp_path):
+    path = tmp_path / "torn.json"
+    path.write_text('{"schema_version": 1,')
+    r = _check("--check", str(path))
+    assert r.returncode == 1
+    assert "Traceback" not in r.stderr
+    assert "not valid JSON" in r.stderr
+
+
+def test_autotune_dir_validation(tmp_path):
+    good = {
+        "format": 1, "schema": "repro-autotune-v1", "backend": "jax",
+        "signature": "x", "versions": {"jax": "0", "repro": "0"},
+        "candidates": [{"attn_impl": "naive", "attn_chunk": 256,
+                        "use_pallas": False, "ms": 1.0}],
+        "winner": {"attn_impl": "naive", "attn_chunk": 256,
+                   "use_pallas": False},
+    }
+    tdir = tmp_path / "autotune"
+    tdir.mkdir()
+    (tdir / "a.tune.json").write_text(json.dumps(good))
+    bench = os.path.join(REPO, "BENCH_serve.json")
+    r = _check("--check", bench, "--autotune-dir", str(tdir))
+    assert r.returncode == 0, r.stderr
+
+    bad = dict(good)
+    bad.pop("winner")
+    (tdir / "b.tune.json").write_text(json.dumps(bad))
+    r = _check("--check", bench, "--autotune-dir", str(tdir))
+    assert r.returncode == 1
+    assert "missing key 'winner'" in r.stderr

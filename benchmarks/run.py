@@ -15,6 +15,10 @@
                     winner on the serving decode step; the record must be
                     reused with zero sweeps, and a cold process must hit
                     the persistent disk cache instead of the pipeline
+  E12 paged       — paged KV pool + chunked scheduling vs the fixed-row
+                    continuous pool on a mixed-length workload: decode
+                    tok/s and KV bytes per active token (paged must
+                    allocate strictly fewer), greedy token parity
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
 diffing across commits; rows also accumulate in ``ROWS`` so
@@ -421,6 +425,68 @@ def bench_serving():
     emit("E10_serving", "kv_pool_peak_active", p.peak_active, "slots")
 
 
+def bench_paged():
+    """E12: the paged KV pool vs the fixed-row continuous pool.
+
+    A mixed-length workload (short and long requests interleaved) is
+    where fixed rows waste the most: every slot reserves ``max_len`` KV
+    rows regardless of the request occupying it, while the paged pool
+    allocates pages lazily as positions cross page boundaries.  The
+    headline rows are ``kv_bytes_per_active_token`` for both modes (pool
+    bytes reserved per token actually cached, averaged over decode
+    dispatches) — paged must be *strictly* lower — plus decode tok/s and
+    greedy token parity (the paged graph's in-graph sampler at
+    temperature 0 must reproduce continuous mode exactly)."""
+    from repro.configs import get_config
+    from repro.launch.engine import ServeEngine
+
+    cfg = get_config("deepseek-7b").reduced()
+    SLOTS, MAX_LEN, PS, K = 4, 64, 8, 4
+    rng = np.random.default_rng(0)
+    # mixed lengths: 4..16-token prompts, 6..40-token generations
+    workload = [(rng.integers(0, cfg.vocab, size=(p,)).astype(np.int32), g)
+                for p, g in [(4, 6), (16, 40), (6, 10), (12, 32),
+                             (4, 8), (8, 24)]]
+
+    def run_mode(mode, warm=False, **kw):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode=mode,
+                          seed=0, **kw)
+        rids = [eng.submit(p, g) for p, g in workload]
+        rep = eng.run()
+        if not warm:
+            emit("E12_paged", f"{mode}_tok_s", rep.tok_s, "tok/s")
+            emit("E12_paged", f"{mode}_decode_tok_s", rep.decode_tok_s,
+                 "tok/s")
+            emit("E12_paged", f"{mode}_kv_bytes_per_active_token",
+                 rep.kv_bytes_per_active_token, "B/tok")
+        return rids, rep
+
+    paged_kw = dict(page_size=PS, chunk_steps=K)
+    run_mode("continuous", warm=True)
+    crids, crep = run_mode("continuous")
+    run_mode("paged", warm=True, **paged_kw)
+    prids, prep = run_mode("paged", **paged_kw)
+
+    agree = all(np.array_equal(crep.results[c], prep.results[p])
+                for c, p in zip(crids, prids))
+    emit("E12_paged", "paged_matches_continuous", int(agree), "bool")
+    assert agree, "paged greedy output diverged from continuous"
+    ratio = prep.kv_bytes_per_active_token / crep.kv_bytes_per_active_token
+    emit("E12_paged", "paged_kv_bytes_ratio", ratio, "x")
+    assert ratio < 1.0, (
+        f"paged pool must reserve strictly fewer KV bytes per active "
+        f"token than fixed rows on a mixed-length workload (got {ratio:.3f}x)")
+    p = prep.pool
+    emit("E12_paged", "page_size", p.page_size, "tokens")
+    emit("E12_paged", "chunk_steps", K, "steps")
+    emit("E12_paged", "peak_pages_in_use", p.peak_pages_in_use, "pages")
+    emit("E12_paged", "fragmentation", p.fragmentation, "frac")
+    emit("E12_paged", "page_allocs", p.page_allocs, "")
+    emit("E12_paged", "page_frees", p.page_frees, "")
+    assert p.pages_in_use == 0 and p.page_allocs == p.page_frees, \
+        "page leak: pool did not drain"
+
+
 def bench_scaling():
     """The dry-run roofline table (claim E8 / deliverable g)."""
     base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -480,6 +546,7 @@ SECTIONS = {
     "collectives": bench_collectives,
     "compile_cache": bench_compile_cache,
     "serving": bench_serving,
+    "paged": bench_paged,
     "autotune": bench_autotune,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,

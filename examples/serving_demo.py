@@ -4,6 +4,14 @@ Three requests with different prompt/generation lengths share two KV
 pool slots; tokens stream out as they are produced, and the third
 request is admitted mid-flight the moment a slot frees up.
 
+The second half re-runs the workload in ``paged`` mode: KV lives in a
+shared page pool (pages allocated as each request's position crosses a
+page boundary, returned on completion), the scheduler decodes
+``chunk_steps`` tokens per dispatch, and sampling knobs (temperature /
+top-k / PRNG key) are per-request graph inputs — greedy requests stay
+token-for-token identical to continuous mode while the pool reserves
+fewer KV bytes per token actually cached.
+
 Run:  PYTHONPATH=src python examples/serving_demo.py
 """
 import numpy as np
@@ -36,6 +44,35 @@ def main():
     p = rep.pool
     print(f"kv pool: {p.slots} slots x {p.bytes_per_slot}B, "
           f"allocs={p.allocs} frees={p.frees} peak={p.peak_active}")
+    kv_cont = rep.kv_bytes_per_active_token
+
+    # --- paged mode: page-granular KV + chunked dispatch + sampling ---
+    print("--- paged + sampling ---")
+    paged = ServeEngine(cfg, slots=2, max_len=24, mode="paged", seed=0,
+                        page_size=4, chunk_steps=4)
+    greedy_rid = None
+    for i, (prompt, max_new) in enumerate(workload):
+        if i == 0:
+            # stochastic request: reproducible via its PRNG key — resubmit
+            # with the same key and you get the same tokens
+            rid = paged.submit(prompt, max_new, temperature=0.8, top_k=16,
+                               key=42)
+            print(f"submitted req{rid}: temperature=0.8 top_k=16 key=42")
+        else:
+            rid = paged.submit(prompt, max_new)  # greedy (temperature 0)
+            greedy_rid = rid
+            print(f"submitted req{rid}: greedy")
+    prep = paged.run()
+    print(f"greedy req{greedy_rid} tokens: "
+          f"{prep.results[greedy_rid].tolist()} "
+          f"(identical to continuous mode)")
+    pp = prep.pool
+    print(f"paged pool: {pp.pages} pages x {pp.page_size} tokens, "
+          f"peak {pp.peak_pages_in_use} in use, "
+          f"page_allocs={pp.page_allocs} page_frees={pp.page_frees}, "
+          f"fragmentation={pp.fragmentation:.2f}")
+    print(f"kv bytes per active token: {prep.kv_bytes_per_active_token:.0f} "
+          f"paged vs {kv_cont:.0f} continuous")
 
 
 if __name__ == "__main__":

@@ -7,8 +7,10 @@ so the perf trajectory is tracked in-repo across PRs.
 ``python scripts/bench_to_json.py --check BENCH_serve.json`` validates a
 committed snapshot's format without running anything (used by CI): the
 schema must parse, the serving section must contain lockstep/donated/
-continuous tok/s rows with positive values, and the donated speedup row
-must be present.  Every failure is a readable ``CHECK FAIL`` line naming
+continuous tok/s rows with positive values, the donated speedup row must
+be present, and the paged section (E12) must carry the
+kv-bytes-per-active-token rows with ``paged_kv_bytes_ratio < 1`` and
+greedy parity == 1.  Every failure is a readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
 diff, never a bare traceback), and the exit code is non-zero.
 
@@ -32,6 +34,16 @@ REQUIRED_SERVING_ROWS = (
     "donated_tok_s", "donated_decode_tok_s",
     "continuous_tok_s", "continuous_decode_tok_s",
     "donated_speedup_x",
+)
+# E12: the paged-pool section.  The ratio row is the headline — the paged
+# pool must reserve strictly fewer KV bytes per active token than fixed
+# rows — and parity must hold (both are re-asserted here so a hand-edited
+# snapshot can't claim a regression-free paged pool).
+REQUIRED_PAGED_ROWS = (
+    "paged_tok_s", "paged_decode_tok_s",
+    "paged_kv_bytes_per_active_token",
+    "continuous_kv_bytes_per_active_token",
+    "paged_kv_bytes_ratio", "paged_matches_continuous",
 )
 
 
@@ -118,19 +130,40 @@ def check(path: str) -> int:
                           f"present: {sorted(r)}")
             continue
         by_name[(r["section"], r["name"])] = r["value"]
-    if "serving" in (doc.get("sections") or []):
-        present = sorted(n for s, n in by_name if s == "E10_serving")
-        for name in REQUIRED_SERVING_ROWS:
-            v = by_name.get(("E10_serving", name))
+    def require(section_label, bench_section, names):
+        present = sorted(n for s, n in by_name if s == bench_section)
+        out = {}
+        for name in names:
+            v = by_name.get((bench_section, name))
             if v is None:
-                errors.append(f"serving row missing: {name!r} "
-                              f"(E10_serving rows present: {present})")
-            else:
-                try:
-                    if float(v) <= 0:
-                        errors.append(f"serving row {name} not positive: {v}")
-                except (TypeError, ValueError):
-                    errors.append(f"serving row {name} not numeric: {v!r}")
+                errors.append(f"{section_label} row missing: {name!r} "
+                              f"({bench_section} rows present: {present})")
+                continue
+            try:
+                fv = float(v)
+            except (TypeError, ValueError):
+                errors.append(f"{section_label} row {name} "
+                              f"not numeric: {v!r}")
+                continue
+            if fv <= 0:
+                errors.append(f"{section_label} row {name} "
+                              f"not positive: {v}")
+            out[name] = fv
+        return out
+
+    if "serving" in (doc.get("sections") or []):
+        require("serving", "E10_serving", REQUIRED_SERVING_ROWS)
+    if "paged" in (doc.get("sections") or []):
+        vals = require("paged", "E12_paged", REQUIRED_PAGED_ROWS)
+        ratio = vals.get("paged_kv_bytes_ratio")
+        if ratio is not None and ratio >= 1.0:
+            errors.append(f"paged row paged_kv_bytes_ratio must be < 1 "
+                          f"(paged reserves fewer KV bytes per active "
+                          f"token than fixed rows), got {ratio}")
+        parity = vals.get("paged_matches_continuous")
+        if parity is not None and parity != 1:
+            errors.append(f"paged row paged_matches_continuous must be 1 "
+                          f"(greedy token parity), got {parity}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -168,7 +201,7 @@ def check_autotune_dir(tune_dir: str) -> int:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sections", nargs="+", default=["serving"])
+    ap.add_argument("--sections", nargs="+", default=["serving", "paged"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

@@ -1,0 +1,128 @@
+"""Cross-mode gate for the CI serving matrix.
+
+``python scripts/check_serving_matrix.py report-a.json report-b.json ...``
+takes the ``EngineReport`` JSON files the matrix jobs wrote via
+``repro.launch.serve --report-json`` (one per mode) and asserts the
+contract the modes share:
+
+  * every greedy report (workload temperature 0) carries the same token
+    stream for every request — in particular ``paged`` must be
+    token-for-token identical to ``continuous``/``donated`` (the modes
+    only differ in *how* KV is stored and how many steps are fused per
+    dispatch, never in what they decode);
+  * the paged pool leaked nothing: every page returned to the free list
+    (``pages_in_use == 0``, ``page_allocs == page_frees``) and the peak
+    never exceeded ``ceil(total_tokens / page_size) + slots`` (each
+    active request can waste at most one partial page);
+  * paged reserved fewer KV bytes per active token than the fixed-row
+    continuous pool on the same workload.
+
+Every failure is a readable ``MATRIX FAIL`` line; exit code 1 on any.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+
+def _load(paths):
+    reports, errors = {}, []
+    for p in paths:
+        try:
+            with open(p) as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as exc:
+            errors.append(f"{p}: unreadable: {exc}")
+            continue
+        mode = doc.get("mode")
+        if not mode or "results" not in doc:
+            errors.append(f"{p}: not an EngineReport dump "
+                          f"(keys: {sorted(doc)[:8]})")
+            continue
+        reports[mode] = doc
+    return reports, errors
+
+
+def check(paths) -> int:
+    reports, errors = _load(paths)
+    greedy = {m: d for m, d in reports.items()
+              if not d.get("workload", {}).get("temperature")}
+
+    if len(greedy) >= 2:
+        base_mode = ("continuous" if "continuous" in greedy
+                     else sorted(greedy)[0])
+        base = greedy[base_mode]["results"]
+        for mode, doc in sorted(greedy.items()):
+            if mode == base_mode:
+                continue
+            if sorted(doc["results"]) != sorted(base):
+                errors.append(
+                    f"{mode}: request ids {sorted(doc['results'])} != "
+                    f"{base_mode}'s {sorted(base)} (different workloads "
+                    f"are not comparable)")
+                continue
+            for rid in sorted(base):
+                if doc["results"][rid] != base[rid]:
+                    errors.append(
+                        f"{mode}: req {rid} diverged from {base_mode}: "
+                        f"{doc['results'][rid]} != {base[rid]}")
+    elif reports:
+        errors.append(f"need >= 2 greedy reports for the parity gate, "
+                      f"got {sorted(greedy)} of {sorted(reports)}")
+
+    paged = reports.get("paged")
+    if paged is None:
+        errors.append(f"no paged report among {sorted(reports)} — the "
+                      f"matrix must exercise mode=paged")
+    else:
+        pool, w = paged.get("pool") or {}, paged.get("workload", {})
+        if pool.get("pages_in_use") != 0:
+            errors.append(f"paged: {pool.get('pages_in_use')} pages still "
+                          f"in use after the workload drained (leak)")
+        if pool.get("page_allocs") != pool.get("page_frees"):
+            errors.append(f"paged: page_allocs {pool.get('page_allocs')} "
+                          f"!= page_frees {pool.get('page_frees')} (leak)")
+        total_tokens = w.get("requests", 0) * (w.get("prompt_len", 0)
+                                               + w.get("gen", 0))
+        if total_tokens and pool.get("page_size"):
+            bound = (math.ceil(total_tokens / pool["page_size"])
+                     + pool.get("slots", 0))
+            if pool.get("peak_pages_in_use", 0) > bound:
+                errors.append(
+                    f"paged: peak_pages_in_use {pool['peak_pages_in_use']} "
+                    f"> ceil({total_tokens}/{pool['page_size']}) + "
+                    f"{pool.get('slots')} slots = {bound}")
+        cont = reports.get("continuous")
+        pb = paged.get("kv_bytes_per_active_token")
+        cb = cont.get("kv_bytes_per_active_token") if cont else None
+        if pb is None:
+            errors.append("paged: kv_bytes_per_active_token missing")
+        elif cb is None:
+            # never silently skip one of the three documented gates
+            errors.append(
+                "no continuous kv_bytes_per_active_token to compare "
+                "against — the matrix must include the continuous leg "
+                "for the KV-bytes gate")
+        elif pb >= cb:
+            errors.append(
+                f"paged reserved {pb:.1f} KV B/active-token — not "
+                f"strictly fewer than continuous's {cb:.1f}")
+
+    if errors:
+        for e in errors:
+            print(f"MATRIX FAIL: {e}", file=sys.stderr)
+        return 1
+    kv = {m: reports[m].get("kv_bytes_per_active_token")
+          for m in sorted(reports)}
+    print(f"serving matrix ok: modes={sorted(reports)}, greedy parity "
+          f"across {sorted(greedy)}, kv B/active-token: "
+          + ", ".join(f"{m}={v:.1f}" if v else f"{m}=n/a"
+                      for m, v in kv.items()))
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        raise SystemExit(f"usage: {sys.argv[0]} report.json [report.json ...]")
+    raise SystemExit(check(sys.argv[1:]))

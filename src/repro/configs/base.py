@@ -132,9 +132,12 @@ class ModelConfig:
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str
-    kind: str        # train | prefill | decode | long_decode
+    kind: str        # train | prefill | decode | long_decode | serve | serve_paged
     seq_len: int
     global_batch: int
+    # serve_paged only: KV pages of this many token rows replace the
+    # fixed per-slot cache row (None for every other kind)
+    page_size: Optional[int] = None
 
 
 SHAPES: Dict[str, ShapeConfig] = {

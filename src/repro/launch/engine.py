@@ -20,6 +20,17 @@ boundary.  Three modes, worst to best:
                      requests free their KV pool slot and queued prompts
                      are admitted mid-flight by prefilling into the freed
                      cache rows.
+  * ``paged``      — continuous batching on the paged chunk graph
+                     (``build_dense_chunk(page_size=...)``): KV lives in a
+                     :class:`PagedKVPool` — pages allocated lazily as each
+                     request's position crosses a page boundary, so a
+                     4-token request no longer reserves ``max_len`` rows —
+                     and the scheduler decodes ``chunk_steps`` tokens per
+                     dispatch, admitting/retiring only at chunk
+                     boundaries.  Sampling (temperature / top-k / PRNG
+                     key) is in-graph per row; greedy (temperature 0, the
+                     default) is token-for-token identical to
+                     ``continuous``.
 
 Donation invariants (see ROADMAP "Serving engine (PR 2)"):
   * the engine is the only owner of the pool buffers; after each raw
@@ -42,8 +53,14 @@ from ..backend import Backend, CompileOptions
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models.lm import ModelGraphs, build_graphs
 
-MODES = ("lockstep", "donated", "continuous")
-_NON_CACHE_INPUTS = ("token", "pos")
+MODES = ("lockstep", "donated", "continuous", "paged")
+# engine-managed step inputs — everything else on a serve/decode graph is
+# a cache/state tensor.  Scoped per graph kind: only the paged graphs
+# declare the page table + sampling knobs, so generic names like "key"
+# stay available as cache/state names everywhere else.
+_STEP_INPUTS = ("token", "pos")
+_PAGED_STEP_INPUTS = _STEP_INPUTS + ("page_tbl", "temperature", "top_k",
+                                     "key")
 
 
 @dataclasses.dataclass
@@ -59,10 +76,45 @@ class Request:
     t_submit: float = 0.0
     t_admit: Optional[float] = None
     t_done: Optional[float] = None
+    # sampling (paged mode): temperature 0 = greedy, top_k 0 = full vocab
+    temperature: float = 0.0
+    top_k: int = 0
+    key: int = 0
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new
+
+
+def _host_uniform(key: int, pos: int) -> float:
+    """np.float32 mirror of ``components.prng_uniform_rows`` — the
+    engine samples a request's *first* (prefill) token on the host with
+    the same (key, pos) hash the graph uses for decode steps, so a
+    request's token stream is a pure function of its key regardless of
+    batching."""
+    x = np.float32(key) * np.float32(12.9898) \
+        + np.float32(pos) * np.float32(78.233) + np.float32(0.5)
+    s = np.float32(np.sin(x)) * np.float32(43758.5453)
+    u = np.float32(s - np.floor(s))
+    return float(min(max(u, np.float32(1e-7)), np.float32(1.0 - 1e-7)))
+
+
+def _host_sample(logits: np.ndarray, temperature: float, top_k: int,
+                 key: int, pos: int) -> int:
+    """Host mirror of ``components.sample_tokens`` for one row."""
+    lg = np.asarray(logits, np.float32).reshape(-1)
+    if temperature <= 0.0:
+        return int(np.argmax(lg))
+    V = lg.size
+    if 0 < top_k < V:
+        kth = np.sort(lg)[V - top_k]
+        lg = np.where(lg >= kth, lg, np.float32(-1e30))
+    sc = lg / np.float32(max(temperature, 1e-6))
+    sc = sc - sc.max()
+    p = np.exp(sc)
+    p /= p.sum()
+    below = int((np.cumsum(p) < _host_uniform(key, pos)).sum())
+    return min(below, V - 1)
 
 
 @dataclasses.dataclass
@@ -129,8 +181,14 @@ class KVCachePool:
         return slot
 
     def free(self, slot: int) -> None:
-        if slot in self._free or not 0 <= slot < self.slots:
-            raise ValueError(f"bad slot {slot}")
+        # invalid frees must raise, never silently return — a slot/page
+        # leak that only shows up as occupancy drift is the worst kind
+        if not 0 <= slot < self.slots:
+            raise ValueError(
+                f"free of out-of-range slot {slot} (pool has "
+                f"{self.slots} slots)")
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
         self._free.append(slot)
         self.frees += 1
 
@@ -168,6 +226,240 @@ class KVCachePool:
 
 
 @dataclasses.dataclass
+class PagedPoolStats:
+    slots: int
+    active: int
+    pages: int               # usable pages (the reserved trash page excluded)
+    page_size: int           # token rows per page
+    pages_in_use: int
+    peak_pages_in_use: int
+    bytes_per_page: int      # summed across all cache tensors
+    total_bytes: int
+    fragmentation: float     # allocated-but-unused token-row fraction,
+                             # averaged over decode dispatches (else the
+                             # instantaneous value at stats() time)
+    allocs: int              # slot (request) allocs
+    frees: int
+    page_allocs: int
+    page_frees: int
+    peak_active: int
+    decode_arena_bytes: int  # compiled chunk's planned intermediate arena
+
+
+class PagedKVPool:
+    """Page-granular, device-resident KV cache pool.
+
+    Instead of one fixed ``max_len`` row per slot, KV lives in a shared
+    pool of ``n_pages`` physical pages of ``page_size`` token rows each
+    (one jax buffer per cache tensor, shaped ``(L, n_pages, Hkv,
+    page_size, D)``), routed through a per-slot page table ``(slots,
+    max_pages)``.  Pages are allocated *lazily* — a slot grows a page
+    only when its position crosses a page boundary — and return to the
+    free list when the request completes, so KV bytes track the tokens
+    actually cached, not the worst case.
+
+    Physical page 0 is reserved as the *trash page*: unallocated
+    page-table entries (and retired rows that keep stepping until the
+    chunk boundary) point at it, so their in-graph writes land somewhere
+    harmless instead of corrupting a reused page.  It is never handed
+    out and is excluded from ``pages_in_use``.
+
+    Admission is deadlock-free by conservative reservation:
+    :meth:`alloc` reserves the request's whole-lifetime page count (its
+    prompt + generation length is known at submit), so the lazy
+    :meth:`ensure_pages` growth of an admitted request can never fail.
+    Buffers follow the same donation discipline as :class:`KVCachePool`
+    (:meth:`update` repoints after every donated dispatch).
+    """
+
+    def __init__(self, names: Sequence[str], types: Sequence, *,
+                 slots: int, page_size: int, max_pages: int,
+                 arena_bytes: int = 0):
+        import jax.numpy as jnp
+
+        self.names = list(names)
+        self.types = list(types)
+        self.buffers = [jnp.zeros(t.shape, np.dtype(t.dtype))
+                        for t in self.types]
+        self.n_pages = self.types[0].shape[1]     # (L, P, Hkv, ps, D)
+        self.page_size = int(page_size)
+        self.max_pages = int(max_pages)
+        self.slots = int(slots)
+        self._free_slots = list(range(self.slots - 1, -1, -1))
+        self._free_pages = list(range(self.n_pages - 1, 0, -1))  # 0 = trash
+        self._slot_pages: List[List[int]] = [[] for _ in range(self.slots)]
+        self._used_tokens = [0] * self.slots
+        self._reserved = [0] * self.slots
+        self.page_table = np.zeros((self.slots, self.max_pages), np.int32)
+        self.allocs = 0
+        self.frees = 0
+        self.page_allocs = 0
+        self.page_frees = 0
+        self.peak_active = 0
+        self.peak_pages_in_use = 0
+        self._frag_sum = 0.0
+        self._frag_samples = 0
+        self.total_bytes = sum(t.nbytes for t in self.types)
+        self.bytes_per_page = self.total_bytes // max(self.n_pages, 1)
+        self.decode_arena_bytes = int(arena_bytes)
+
+    @property
+    def active(self) -> int:
+        return self.slots - len(self._free_slots)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free_pages)
+
+    def pages_for(self, tokens: int) -> int:
+        need = -(-int(tokens) // self.page_size)
+        if need > self.max_pages:
+            # fail loudly: an under-sized reservation would let in-graph
+            # writes clamp onto the request's last page and corrupt its
+            # own cached rows (the engine pre-validates via max_len;
+            # direct pool users get the error here)
+            raise ValueError(
+                f"{tokens} tokens need {need} pages but the page table "
+                f"holds at most max_pages={self.max_pages} "
+                f"({self.max_pages * self.page_size} tokens)")
+        return need
+
+    @property
+    def _outstanding(self) -> int:
+        """Reserved-but-not-yet-allocated pages across active slots."""
+        return sum(r - len(p)
+                   for r, p in zip(self._reserved, self._slot_pages))
+
+    @property
+    def committed_pages(self) -> int:
+        """Pages unavailable to new admissions: allocated plus
+        reservation-held — the pool's true committed footprint (what the
+        KV-bytes-per-active-token metric must count, or early-lifetime
+        requests would flatter it)."""
+        return self.pages_in_use + self._outstanding
+
+    def can_admit(self, total_tokens: int) -> bool:
+        return bool(self._free_slots) and \
+            len(self._free_pages) - self._outstanding >= \
+            self.pages_for(total_tokens)
+
+    def alloc(self, total_tokens: int) -> int:
+        """Claim a slot and reserve pages for a ``total_tokens``-long
+        request (prompt + generation)."""
+        if not self.can_admit(total_tokens):
+            raise RuntimeError(
+                f"paged KV pool exhausted: active={self.active}/"
+                f"{self.slots} slots, {len(self._free_pages)} free pages "
+                f"({self._outstanding} already spoken for), "
+                f"{self.pages_for(total_tokens)} needed")
+        slot = self._free_slots.pop()
+        self._reserved[slot] = self.pages_for(total_tokens)
+        self._used_tokens[slot] = 0
+        self.allocs += 1
+        self.peak_active = max(self.peak_active, self.active)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.slots:
+            raise ValueError(
+                f"free of out-of-range slot {slot} (pool has "
+                f"{self.slots} slots)")
+        if slot in self._free_slots:
+            raise ValueError(f"double free of slot {slot}")
+        for pid in self._slot_pages[slot]:
+            self._free_pages.append(pid)
+            self.page_frees += 1
+        self._slot_pages[slot] = []
+        self._reserved[slot] = 0
+        self._used_tokens[slot] = 0
+        self.page_table[slot, :] = 0   # back to the trash page
+        self._free_slots.append(slot)
+        self.frees += 1
+
+    def ensure_pages(self, slot: int, upto_pos: int) -> None:
+        """Lazily grow ``slot`` so it can hold token rows 0..upto_pos."""
+        need = self.pages_for(upto_pos + 1)
+        pages = self._slot_pages[slot]
+        while len(pages) < need:
+            if not self._free_pages:
+                raise RuntimeError(
+                    f"paged KV pool out of pages growing slot {slot} "
+                    f"(reservation bug: admission must cover the "
+                    f"request's whole lifetime)")
+            pid = self._free_pages.pop()
+            self.page_table[slot, len(pages)] = pid
+            pages.append(pid)
+            self.page_allocs += 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    def note_used(self, slot: int, tokens: int) -> None:
+        """Record how many token rows ``slot`` actually holds (for the
+        fragmentation stat)."""
+        self._used_tokens[slot] = int(tokens)
+
+    def sample_fragmentation(self) -> None:
+        """Record the allocated-but-unused token-row fraction at a
+        dispatch.  Sampled *during* decode (the engine calls this once
+        per dispatch) because the instantaneous value after the workload
+        drains is vacuously 0 — every page is back on the free list."""
+        cap = self.pages_in_use * self.page_size
+        if cap:
+            self._frag_sum += 1.0 - sum(self._used_tokens) / cap
+            self._frag_samples += 1
+
+    def write_prefix(self, slot: int, name: str, prefix) -> None:
+        """Scatter a (L, 1, Hkv, Plen, D) prefill cache into ``slot``'s
+        pages (``ensure_pages(slot, Plen - 1)`` first).
+
+        One indexed update per cache tensor — the prefix is zero-padded
+        to a page multiple and scattered onto all of the slot's pages at
+        once, not page by page (each un-jitted ``.at[].set`` copies the
+        whole pool buffer, so a per-page loop would cost O(pages_per_
+        prompt x pool_bytes) per admission).  The padding rows land
+        beyond ``pos`` and stay masked until a later step overwrites
+        them."""
+        import jax.numpy as jnp
+
+        i = self.names.index(name)
+        L, _, Hkv, Plen, D = prefix.shape
+        ps = self.page_size
+        pids = self._slot_pages[slot][:-(-Plen // ps)]
+        x = prefix[:, 0]
+        pad = len(pids) * ps - Plen
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((L, Hkv, pad, D), x.dtype)], axis=2)
+        x = jnp.transpose(x.reshape(L, Hkv, len(pids), ps, D),
+                          (0, 2, 1, 3, 4))
+        self.buffers[i] = self.buffers[i].at[
+            :, jnp.asarray(pids, np.int32)].set(x)
+
+    def update(self, new_buffers: Sequence) -> None:
+        """Repoint the pool at a donated dispatch's outputs."""
+        assert len(new_buffers) == len(self.buffers)
+        self.buffers = list(new_buffers)
+
+    def stats(self) -> PagedPoolStats:
+        used = sum(self._used_tokens)
+        cap = self.pages_in_use * self.page_size
+        frag = (self._frag_sum / self._frag_samples if self._frag_samples
+                else (1.0 - used / cap if cap else 0.0))
+        return PagedPoolStats(
+            slots=self.slots, active=self.active,
+            pages=self.n_pages - 1, page_size=self.page_size,
+            pages_in_use=self.pages_in_use,
+            peak_pages_in_use=self.peak_pages_in_use,
+            bytes_per_page=self.bytes_per_page,
+            total_bytes=self.total_bytes,
+            fragmentation=frag,
+            allocs=self.allocs, frees=self.frees,
+            page_allocs=self.page_allocs, page_frees=self.page_frees,
+            peak_active=self.peak_active,
+            decode_arena_bytes=self.decode_arena_bytes)
+
+
+@dataclasses.dataclass
 class EngineReport:
     mode: str
     results: Dict[int, np.ndarray]  # rid -> generated token ids
@@ -180,7 +472,11 @@ class EngineReport:
     steps: int
     prefill_seconds: float
     late_admissions: int
-    pool: Optional[PoolStats]
+    pool: Optional[object]   # PoolStats (continuous) | PagedPoolStats (paged)
+    # KV bytes the pool had reserved per token actually cached, averaged
+    # over decode dispatches (continuous + paged modes) — the memory
+    # metric the paged pool exists to shrink
+    kv_bytes_per_active_token: Optional[float] = None
 
 
 class ServeEngine:
@@ -194,7 +490,10 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, *, slots: int = 4, max_len: int = 64,
                  mode: str = "continuous", seed: int = 0,
                  backend: str = "jax",
-                 options: Optional[CompileOptions] = None):
+                 options: Optional[CompileOptions] = None,
+                 page_size: Optional[int] = None,
+                 chunk_steps: Optional[int] = None,
+                 pages: Optional[int] = None):
         """Every graph the engine compiles (serve/decode step, per-length
         prefills, fused donated chunks) goes through ``options`` — so
         ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
@@ -216,12 +515,51 @@ class ServeEngine:
         self.backend = Backend.create(backend)
         self.base_options = options or CompileOptions()
 
-        kind = "serve" if mode == "continuous" else "decode"
-        self.graphs = build_graphs(
-            cfg, ShapeConfig(kind, kind, self.max_len, self.slots), self.slots)
+        if mode == "paged":
+            # paged mode always dispatches the fused chunk graph — one
+            # dispatch decodes chunk_steps tokens per row; chunk_steps=1
+            # degenerates to per-step scheduling like `continuous`
+            page_size = 8 if page_size is None else page_size
+            chunk_steps = 4 if chunk_steps is None else chunk_steps
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if chunk_steps < 1:
+                raise ValueError(
+                    f"chunk_steps must be >= 1, got {chunk_steps}")
+            self.page_size = int(page_size)
+            self.chunk_steps = int(chunk_steps)
+            mp = -(-self.max_len // self.page_size)
+            # default pool: the worst case (every slot at max_len) plus
+            # the trash page — `pages` shrinks it to create admission
+            # pressure on mixed-length workloads
+            self.n_pages = int(pages) if pages is not None \
+                else 1 + self.slots * mp
+            if self.n_pages < 2:
+                raise ValueError(
+                    f"pages must be >= 2 (trash page + 1), got "
+                    f"{self.n_pages}")
+            from ..models.lm import build_dense_chunk
+            self.graphs = build_dense_chunk(
+                cfg, self.max_len, self.slots, self.chunk_steps,
+                page_size=self.page_size, n_pages=self.n_pages)
+        else:
+            # never silently ignore paged-only knobs in other modes
+            ignored = {k: v for k, v in [("page_size", page_size),
+                                         ("chunk_steps", chunk_steps),
+                                         ("pages", pages)] if v is not None}
+            if ignored:
+                raise ValueError(
+                    f"{sorted(ignored)} need mode='paged'; mode {mode!r} "
+                    f"uses fixed per-slot cache rows")
+            kind = "serve" if mode == "continuous" else "decode"
+            self.graphs = build_graphs(
+                cfg, ShapeConfig(kind, kind, self.max_len, self.slots),
+                self.slots)
         b = self.graphs.builder
+        self._step_inputs = (_PAGED_STEP_INPUTS if mode == "paged"
+                             else _STEP_INPUTS)
         self.cache_names = [n.name for n in b.inputs
-                            if n.name not in _NON_CACHE_INPUTS]
+                            if n.name not in self._step_inputs]
         # decode outputs 1..N map to the cache inputs they update, by
         # name (aux["state_out_names"]); inputs absent from the list are
         # step constants (e.g. whisper cross_k/v, vlm vision caches) and
@@ -231,7 +569,7 @@ class ServeEngine:
         self._recycle = [out_names.index(n) if n in out_names else None
                          for n in self.cache_names]
         cache_ix = [i for i, n in enumerate(b.inputs)
-                    if n.name not in _NON_CACHE_INPUTS]
+                    if n.name not in self._step_inputs]
         # donate only the inputs an output recycles into — donating a
         # step constant would free a buffer the next step still reads
         donate = tuple(ix for ix, j in zip(cache_ix, self._recycle)
@@ -250,15 +588,26 @@ class ServeEngine:
                                 for n, v in self.params.items()}
             self.jparams = [self._jparam_map[n] for n in b.param_names()]
 
-        self.pool: Optional[KVCachePool] = None
-        if mode == "continuous":
+        self.pool = None  # KVCachePool | PagedKVPool
+        if mode in ("continuous", "paged"):
             cache_nodes = [n for n in b.inputs
-                           if n.name not in _NON_CACHE_INPUTS]
-            self.pool = KVCachePool(
-                [n.name for n in cache_nodes],
-                [n.out_types[0] for n in cache_nodes],
-                [b.input_specs[n.name] for n in cache_nodes],
-                arena_bytes=self.cf.memory_plan.arena_bytes)
+                           if n.name not in self._step_inputs]
+            if mode == "continuous":
+                self.pool = KVCachePool(
+                    [n.name for n in cache_nodes],
+                    [n.out_types[0] for n in cache_nodes],
+                    [b.input_specs[n.name] for n in cache_nodes],
+                    arena_bytes=self.cf.memory_plan.arena_bytes)
+            else:
+                self.pool = PagedKVPool(
+                    [n.name for n in cache_nodes],
+                    [n.out_types[0] for n in cache_nodes],
+                    slots=self.slots, page_size=self.page_size,
+                    max_pages=self.graphs.aux["max_pages"],
+                    arena_bytes=self.cf.memory_plan.arena_bytes)
+                self._temp = np.zeros((self.slots,), np.float32)
+                self._topk = np.zeros((self.slots,), np.int32)
+                self._key = np.zeros((self.slots,), np.int32)
             self._tok = np.zeros((self.slots, 1), np.int32)
             self._pos = np.zeros((self.slots,), np.int32)
             self._slot_req: List[Optional[int]] = [None] * self.slots
@@ -272,13 +621,23 @@ class ServeEngine:
         self._decode_tokens = 0
         self.prefill_seconds = 0.0
         self.late_admissions = 0
+        # kv-footprint samples: (reserved bytes x tokens cached) summed
+        # over decode dispatches — ratio = KV bytes per active token
+        self._kv_byte_steps = 0.0
+        self._kv_token_steps = 0
         self._t0_work: Optional[float] = None  # first dispatched work
         self._chunks: Dict[int, Tuple] = {}   # steps -> (graphs, compiled)
         # prompt-length -> (ModelGraphs, CompiledFunction, ordered jax params)
         self._prefill: Dict[Tuple[int, int], Tuple] = {}
 
     # -- request intake ------------------------------------------------------
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+               top_k: int = 0, key: int = 0) -> int:
+        """Queue a request.  ``temperature``/``top_k``/``key`` are per-row
+        sampling inputs of the paged graph (temperature 0 = greedy, the
+        default and the cross-mode parity baseline; top_k 0 = full
+        vocabulary; ``key`` seeds the request's PRNG stream — same key,
+        same tokens)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
@@ -286,10 +645,36 @@ class ServeEngine:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
                 f"max_len={self.max_len}")
+        if self.mode == "paged":
+            # a request that outsizes the whole (possibly user-shrunk)
+            # page pool would wait in the queue forever — reject now
+            usable = self.pool.n_pages - 1   # page 0 is the trash page
+            need = self.pool.pages_for(len(prompt) + max_new)
+            if need > usable:
+                raise ValueError(
+                    f"request needs {need} pages ({len(prompt)} prompt + "
+                    f"{max_new} new tokens at page_size "
+                    f"{self.pool.page_size}) but the pool only has "
+                    f"{usable} usable pages — it could never be admitted")
+        if temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {top_k}")
+        if not 0 <= key < 1 << 24:
+            # the in-graph PRNG hashes the key through f32, where ints
+            # are exact only up to 2^24 — larger keys would silently
+            # collide with neighbours instead of drawing distinct streams
+            raise ValueError(f"key must be in [0, 2^24), got {key}")
+        if self.mode != "paged" and (temperature or top_k or key):
+            raise ValueError(
+                f"stochastic sampling (temperature/top_k/key) needs "
+                f"mode='paged'; mode {self.mode!r} decodes greedily")
         rid = self._next_rid
         self._next_rid += 1
         self._requests[rid] = Request(rid, prompt, int(max_new),
-                                      t_submit=time.perf_counter())
+                                      t_submit=time.perf_counter(),
+                                      temperature=float(temperature),
+                                      top_k=int(top_k), key=int(key))
         self._queue.append(rid)
         return rid
 
@@ -332,13 +717,23 @@ class ServeEngine:
 
     # -- continuous batching -------------------------------------------------
     def _admit(self, req: Request, slot: int) -> int:
-        """Prefill ``req`` into pool ``slot``; returns its first token."""
+        """Prefill ``req`` into pool ``slot``; returns its first token.
+
+        The first token is host-sampled with the same (key, pos) hash
+        the graph uses for decode steps, at pos = last prompt position
+        — plain argmax for greedy rows, i.e. every non-paged request.
+        Shared by the continuous and paged schedulers (the pools expose
+        the same ``write_prefix`` contract); paged slots grow their
+        pages before the scatter and record the rows actually cached."""
         t0 = time.perf_counter()
         P = len(req.prompt)
         g, cf, pvals = self._prefill_for(P, 1)
         outs = cf.raw(*self._prefill_inputs(g, req.prompt.reshape(1, P)),
                       *pvals)
-        first = int(np.argmax(np.asarray(outs[0]).reshape(-1)))
+        first = _host_sample(np.asarray(outs[0]), req.temperature,
+                             req.top_k, req.key, P - 1)
+        if self.mode == "paged":
+            self.pool.ensure_pages(slot, P - 1)
         for i, name in enumerate(g.aux.get("cache_names", [])):
             self.pool.write_prefix(slot, name, outs[1 + i])
         req.slot = slot
@@ -348,6 +743,8 @@ class ServeEngine:
         self._slot_req[slot] = req.rid
         self._tok[slot, 0] = first
         self._pos[slot] = P
+        if self.mode == "paged":
+            self.pool.note_used(slot, P)
         self.prefill_seconds += time.perf_counter() - t0
         return first
 
@@ -359,13 +756,18 @@ class ServeEngine:
             req.slot = None
 
     def step(self) -> List[Tuple[int, int]]:
-        """One engine step: admit what fits, then one batched decode step.
+        """One engine step: admit what fits, then one batched decode
+        dispatch (one token per row in continuous mode, ``chunk_steps``
+        tokens per row in paged mode).
 
         Returns the ``(rid, token)`` pairs emitted.  Only available in
-        continuous mode — lockstep/donated run whole workloads via
+        continuous/paged modes — lockstep/donated run whole workloads via
         :meth:`run`."""
+        if self.mode == "paged":
+            return self._step_paged()
         if self.mode != "continuous":
-            raise RuntimeError("step() is only available in continuous mode")
+            raise RuntimeError(
+                "step() is only available in continuous/paged modes")
         if self._t0_work is None:
             self._t0_work = time.perf_counter()
         emitted: List[Tuple[int, int]] = []
@@ -381,6 +783,8 @@ class ServeEngine:
                   for s, rid in enumerate(self._slot_req) if rid is not None]
         if not active:
             return emitted
+        self._kv_sample(len(active) * self.pool.bytes_per_slot,
+                        sum(r.pos for _, r in active))
         t0 = time.perf_counter()
         outs = self.cf.raw(self._tok, self._pos, *self.pool.buffers,
                            *self.jparams)
@@ -403,6 +807,89 @@ class ServeEngine:
                 self._finish(req)
         return emitted
 
+    # -- paged chunked scheduling --------------------------------------------
+    def _step_paged(self) -> List[Tuple[int, int]]:
+        """One chunk: admit what fits (chunk boundary = the only
+        admission/retirement point), grow pages to cover the chunk's
+        writes, then one fused ``chunk_steps``-token dispatch."""
+        if self._t0_work is None:
+            self._t0_work = time.perf_counter()
+        K = self.chunk_steps
+        emitted: List[Tuple[int, int]] = []
+        while self._queue:
+            req = self._requests[self._queue[0]]
+            if not self.pool.can_admit(len(req.prompt) + req.max_new):
+                break
+            self._queue.pop(0)
+            slot = self.pool.alloc(len(req.prompt) + req.max_new)
+            if self._steps > 0:
+                self.late_admissions += 1
+            emitted.append((req.rid, self._admit(req, slot)))
+            if req.done:  # max_new == 1: done straight out of prefill
+                self._finish(req)
+        active = [(s, self._requests[rid])
+                  for s, rid in enumerate(self._slot_req) if rid is not None]
+        if not active:
+            return emitted
+        for slot, req in active:
+            # cover this chunk's writes, capped at the request's lifetime
+            # (== its admission reservation); a row that finishes
+            # mid-chunk keeps stepping until the boundary — overrun
+            # writes beyond the cap land on its own tail rows or the
+            # trash page (logical page clamped in-graph), both harmless
+            # because overrun steps' outputs are discarded
+            self.pool.ensure_pages(
+                slot, min(req.pos + K, len(req.prompt) + req.max_new) - 1)
+            self._pos[slot] = req.pos
+            self._tok[slot, 0] = req.tokens[-1]
+            self._temp[slot] = req.temperature
+            self._topk[slot] = req.top_k
+            self._key[slot] = req.key
+        for s in range(self.slots):
+            if self._slot_req[s] is None:
+                # idle rows decode garbage into the trash page (their
+                # page-table row is all zeros) and are ignored below
+                self._pos[s] = 0
+                self._tok[s, 0] = 0
+                self._temp[s] = 0.0
+                self._topk[s] = 0
+                self._key[s] = 0
+        self._kv_sample(self.pool.committed_pages * self.pool.bytes_per_page,
+                        sum(r.pos for _, r in active))
+        self.pool.sample_fragmentation()
+        t0 = time.perf_counter()
+        outs = self.cf.raw(self._tok, self._pos, self.pool.page_table,
+                           self._temp, self._topk, self._key,
+                           *self.pool.buffers, *self.jparams)
+        toks = np.asarray(outs[0])  # (chunk_steps, B, 1) — syncs the chain
+        self.pool.update([self.pool.buffers[k] if j is None else outs[1 + j]
+                          for k, j in enumerate(self._recycle)])
+        dt = time.perf_counter() - t0
+        self._steps += 1
+        self.step_seconds.append(dt)
+        chunk_tokens = 0
+        for slot, req in active:
+            take = min(req.max_new - len(req.tokens), K)
+            for t in toks[:take, slot, 0]:
+                req.tokens.append(int(t))
+                emitted.append((req.rid, int(t)))
+            req.pos += take
+            self.pool.note_used(slot, req.pos)
+            chunk_tokens += take
+            if req.done:
+                self._finish(req)
+        self._decode_tokens += chunk_tokens
+        # like donated mode, a chunk's tokens become visible when the
+        # dispatch returns: the honest per-token latency sample is the
+        # chunk duration (chunking trades time-to-token for throughput)
+        self.lat_ms.extend([dt * 1e3] * chunk_tokens)
+        return emitted
+
+    def _kv_sample(self, reserved_bytes: int, active_tokens: int) -> None:
+        if active_tokens > 0:
+            self._kv_byte_steps += float(reserved_bytes)
+            self._kv_token_steps += int(active_tokens)
+
     def stream(self) -> Iterator[Tuple[int, int]]:
         """Yield ``(rid, token)`` pairs until all submitted work drains."""
         while self._queue or any(r is not None for r in self._slot_req):
@@ -416,7 +903,7 @@ class ServeEngine:
             from ..models.lm import build_dense_chunk
             g = build_dense_chunk(self.cfg, self.max_len, self.slots, steps)
             cache_ix = [i for i, n in enumerate(g.builder.inputs)
-                        if n.name not in _NON_CACHE_INPUTS]
+                        if n.name not in _STEP_INPUTS]
             cf = self.backend.compile(
                 g.fn, self.base_options.replace(donate_argnums=tuple(cache_ix)))
             pvals = [self._jparam_map[n] for n in g.builder.param_names()]
@@ -521,7 +1008,7 @@ class ServeEngine:
         b = self.graphs.builder
         caches = []
         for node in b.inputs:
-            if node.name in _NON_CACHE_INPUTS:
+            if node.name in self._step_inputs:
                 continue
             t = node.out_types[0]
             buf = np.zeros(t.shape, t.dtype)
@@ -553,7 +1040,7 @@ class ServeEngine:
         a ``stream()``-then-``run()`` sequence reports the full span."""
         if self._t0_work is None:
             self._t0_work = time.perf_counter()
-        if self.mode == "continuous":
+        if self.mode in ("continuous", "paged"):
             for _ in self.stream():
                 pass
         else:
@@ -571,4 +1058,7 @@ class ServeEngine:
             p95_ms=float(np.percentile(self.lat_ms, 95)) if self.lat_ms else 0.0,
             steps=self._steps, prefill_seconds=self.prefill_seconds,
             late_admissions=self.late_admissions,
-            pool=self.pool.stats() if self.pool is not None else None)
+            pool=self.pool.stats() if self.pool is not None else None,
+            kv_bytes_per_active_token=(
+                self._kv_byte_steps / self._kv_token_steps
+                if self._kv_token_steps else None))

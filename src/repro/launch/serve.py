@@ -8,12 +8,22 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
       --reduced --batch 4 --prompt-len 16 --gen 32 --mode continuous
 
+``--mode paged`` serves through the paged KV pool (``--page-size``,
+``--chunk-steps``, ``--pages``) with in-graph sampling: ``--temperature``
+/ ``--top-k`` apply to every request (0 = greedy, the default — the
+cross-mode parity baseline).
+
 ``--smoke`` asserts the run is sane (tok/s > 0, pool stats consistent,
 every request fully generated) — used by the CI serving smoke step.
+``--report-json FILE`` dumps the EngineReport (results, pool stats,
+kv_bytes_per_active_token) for the CI serving matrix's parity check
+(``scripts/check_serving_matrix.py``).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 from typing import List, Optional
 
 import numpy as np
@@ -28,11 +38,31 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="number of requests (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="KV capacity per slot (default: prompt-len + gen; "
+                         "provisioning headroom beyond the workload is "
+                         "where the paged pool's savings show)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mode", default="continuous",
-                    choices=("lockstep", "donated", "continuous"))
+                    choices=("lockstep", "donated", "continuous", "paged"))
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged mode: token rows per KV page (default 8)")
+    ap.add_argument("--chunk-steps", type=int, default=None,
+                    help="paged mode: decode steps fused per dispatch, "
+                         "admission only at chunk boundaries (default 4)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged mode: physical page-pool size (default: "
+                         "worst case, slots * ceil(max_len/page_size) + 1)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="paged mode: sampling temperature for every "
+                         "request (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="paged mode: top-k cutoff (0 = full vocabulary)")
     ap.add_argument("--smoke", action="store_true",
                     help="assert tok/s > 0 and pool stats are sane")
+    ap.add_argument("--report-json", metavar="FILE", default=None,
+                    help="dump the EngineReport as JSON (CI serving-matrix "
+                         "artifact; parity-checked across modes)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent compile-cache dir (default: "
                          "$REPRO_CACHE_DIR if set, else disabled)")
@@ -53,19 +83,46 @@ def main(argv: Optional[List[str]] = None) -> int:
         cfg = cfg.reduced()
     n_req = args.requests or args.batch
     P, G = args.prompt_len, args.gen
+    max_len = args.max_len or (P + G)
+    if max_len < P + G:
+        raise SystemExit(f"--max-len {max_len} < prompt-len + gen ({P + G})")
 
     mode = args.mode
     if cfg.family != "dense" and mode != "lockstep":
+        if mode == "paged":
+            # an explicit paged request must not silently fall back to a
+            # mode that ignores its page/sampling flags
+            raise SystemExit(
+                f"--mode paged needs the dense family's serve graphs; "
+                f"{cfg.name} ({cfg.family}) only serves via "
+                f"--mode lockstep")
         print(f"[serve] {cfg.name} ({cfg.family}): no serve/chunk graphs "
               f"yet, falling back to --mode lockstep")
         mode = "lockstep"
+    if mode != "paged" and (args.temperature or args.top_k):
+        # never silently decode greedy when the user asked for sampling
+        raise SystemExit(
+            f"--temperature/--top-k need --mode paged (in-graph sampling); "
+            f"mode {mode!r} decodes greedily")
+    if mode != "paged" and any(v is not None for v in
+                               (args.page_size, args.chunk_steps,
+                                args.pages)):
+        raise SystemExit(
+            f"--page-size/--chunk-steps/--pages need --mode paged; "
+            f"mode {mode!r} uses fixed per-slot cache rows")
     options = CompileOptions(cache_dir=args.cache_dir,
                              autotune=args.autotune)
-    engine = ServeEngine(cfg, slots=args.batch, max_len=P + G,
-                         mode=mode, seed=args.seed, options=options)
+    engine = ServeEngine(cfg, slots=args.batch, max_len=max_len,
+                         mode=mode, seed=args.seed, options=options,
+                         page_size=args.page_size,
+                         chunk_steps=args.chunk_steps, pages=args.pages)
+    sampling = {}
+    if mode == "paged" and (args.temperature or args.top_k):
+        sampling = dict(temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(args.seed)
-    rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G)
-            for _ in range(n_req)]
+    rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G,
+                          **(dict(sampling, key=i) if sampling else {}))
+            for i in range(n_req)]
     rep = engine.run()
 
     print(f"[serve:{rep.mode}] {n_req} reqs x {G} tokens "
@@ -75,10 +132,23 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{rep.steps} steps, late admissions {rep.late_admissions})")
     if rep.pool is not None:
         p = rep.pool
-        print(f"[kv-pool] slots={p.slots} bytes/slot={p.bytes_per_slot} "
-              f"total={p.total_bytes} allocs={p.allocs} frees={p.frees} "
-              f"peak_active={p.peak_active} "
-              f"arena={p.decode_arena_bytes}B")
+        if mode == "paged":
+            print(f"[kv-pool:paged] slots={p.slots} pages={p.pages} "
+                  f"page_size={p.page_size} bytes/page={p.bytes_per_page} "
+                  f"in_use={p.pages_in_use} peak={p.peak_pages_in_use} "
+                  f"frag={p.fragmentation:.3f} "
+                  f"page_allocs={p.page_allocs} page_frees={p.page_frees} "
+                  f"arena={p.decode_arena_bytes}B")
+            if rep.kv_bytes_per_active_token is not None:
+                # None: no decode dispatch ran (e.g. --gen 1 finishes
+                # every request straight out of prefill)
+                print(f"[kv-bytes/active-token] "
+                      f"{rep.kv_bytes_per_active_token:.1f}")
+        else:
+            print(f"[kv-pool] slots={p.slots} bytes/slot={p.bytes_per_slot} "
+                  f"total={p.total_bytes} allocs={p.allocs} frees={p.frees} "
+                  f"peak_active={p.peak_active} "
+                  f"arena={p.decode_arena_bytes}B")
     st = engine.cache_stats()
     print(f"[compile-cache] hits={st.hits} misses={st.misses} size={st.size} "
           f"disk_hits={st.disk_hits} disk_misses={st.disk_misses} "
@@ -94,12 +164,36 @@ def main(argv: Optional[List[str]] = None) -> int:
             "every request must generate all tokens"
         if rep.pool is not None:
             p = rep.pool
-            assert p.active == 0 and p.occupancy == 0.0, \
-                "pool must drain when all requests finish"
             assert p.allocs == n_req and p.frees == n_req, \
                 f"allocs/frees must match requests ({p.allocs}/{p.frees})"
-            assert p.total_bytes > 0 and p.bytes_per_slot > 0
+            assert p.total_bytes > 0
+            if mode == "paged":
+                assert p.active == 0 and p.pages_in_use == 0, \
+                    "paged pool must return every page when requests finish"
+                assert p.page_allocs == p.page_frees, \
+                    f"page leak: {p.page_allocs} allocs vs " \
+                    f"{p.page_frees} frees"
+                # each active request wastes at most one partial page
+                bound = -(-n_req * (P + G) // p.page_size) + p.slots
+                assert p.peak_pages_in_use <= bound, \
+                    f"peak pages {p.peak_pages_in_use} > bound {bound}"
+            else:
+                assert p.active == 0 and p.occupancy == 0.0, \
+                    "pool must drain when all requests finish"
+                assert p.bytes_per_slot > 0
         print("[smoke] ok")
+    if args.report_json:
+        doc = dataclasses.asdict(rep)
+        doc["results"] = {str(r): rep.results[r].tolist() for r in rids}
+        doc["workload"] = {"requests": n_req, "prompt_len": P, "gen": G,
+                           "slots": args.batch, "max_len": max_len,
+                           "seed": args.seed,
+                           "temperature": args.temperature,
+                           "top_k": args.top_k}
+        with open(args.report_json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"[report] wrote {args.report_json}")
     if args.min_disk_hits is not None:
         assert st.disk_hits >= args.min_disk_hits, (
             f"expected >= {args.min_disk_hits} persistent-cache disk hits, "

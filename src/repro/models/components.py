@@ -238,34 +238,16 @@ def self_attention(
     return constrain(out, BATCH_SPEC), extras
 
 
-def _rowpos_cached_attention(
-    b: ModelBuilder, q: Value, k: Value, v: Value,
-    cache_k: Value, cache_v: Value, pos: Value, *,
-    n_heads: int, n_kv: int, d_head: int, window: Optional[int] = None,
-) -> Tuple[Value, Value, Value]:
-    """Single-token cached attention with a per-row position vector.
-
-    q/k/v: (B, H, 1, D); cache_k/v: (B, Hkv, Skv, D); pos: (B,) i32.
-    Each row writes its k/v at slot ``pos[b]`` (a one-hot blend —
-    DynamicUpdateSlice only takes scalar starts) and attends keys with
-    ``kpos <= pos[b]``, so rows at different decode depths share one
-    batched step.  Numerics mirror ``decompose_attention``: f32 scores,
-    -1e30 mask fill, f32 softmax.  Returns (new_k, new_v, att (B,H,1,Dv)).
-    """
+def _rowpos_attend(q: Value, cache_k: Value, cache_v: Value, kpos: Value,
+                   posb: Value, *, n_heads: int, n_kv: int, d_head: int,
+                   window: Optional[int] = None) -> Value:
+    """Masked single-token attention over a (B, Hkv, Skv, D) key/value
+    view with per-row positions: attends keys with ``kpos <= pos[b]``.
+    Numerics mirror ``decompose_attention``: f32 scores, -1e30 mask fill,
+    f32 softmax.  Shared by the row-position (continuous) and paged cache
+    paths — both must emit bit-identical math for token parity."""
     B, Hkv, Skv, D = cache_k.shape
     Dv = cache_v.shape[-1]
-    kpos = ops.iota((B, Skv), 1, "i32")
-    posb = ops.broadcast_to(ops.reshape(pos, (B, 1)), (B, Skv))
-    write = ops.reshape(ops.equal(kpos, posb), (B, 1, Skv, 1))
-
-    def blend(cache, new):
-        return ops.select(ops.broadcast_to(write, cache.shape),
-                          ops.broadcast_to(ops.convert(new, cache.dtype),
-                                           cache.shape),
-                          cache)
-
-    cache_k = blend(cache_k, k)
-    cache_v = blend(cache_v, v)
     rep = n_heads // n_kv
     q5 = ops.reshape(ops.convert(q, "f32"), (B, n_kv, rep, 1, D))
     kf = ops.convert(cache_k, "f32")
@@ -284,8 +266,183 @@ def _rowpos_cached_attention(
     neg = ops.broadcast_to(ops.constant(-1e30, dtype="f32"), scores.shape)
     p = ops.softmax(ops.select(maskb, scores, neg), axis=-1)
     att = ops.einsum("bhrqk,bhkd->bhrqd", p, vf)
-    att = ops.convert(ops.reshape(att, (B, n_heads, 1, Dv)), q.dtype)
+    return ops.convert(ops.reshape(att, (B, n_heads, 1, Dv)), q.dtype)
+
+
+def _rowpos_cached_attention(
+    b: ModelBuilder, q: Value, k: Value, v: Value,
+    cache_k: Value, cache_v: Value, pos: Value, *,
+    n_heads: int, n_kv: int, d_head: int, window: Optional[int] = None,
+) -> Tuple[Value, Value, Value]:
+    """Single-token cached attention with a per-row position vector.
+
+    q/k/v: (B, H, 1, D); cache_k/v: (B, Hkv, Skv, D); pos: (B,) i32.
+    Each row writes its k/v at slot ``pos[b]`` (a one-hot blend —
+    DynamicUpdateSlice only takes scalar starts) and attends keys with
+    ``kpos <= pos[b]``, so rows at different decode depths share one
+    batched step.  Returns (new_k, new_v, att (B,H,1,Dv)).
+    """
+    B, Hkv, Skv, D = cache_k.shape
+    kpos = ops.iota((B, Skv), 1, "i32")
+    posb = ops.broadcast_to(ops.reshape(pos, (B, 1)), (B, Skv))
+    write = ops.reshape(ops.equal(kpos, posb), (B, 1, Skv, 1))
+
+    def blend(cache, new):
+        return ops.select(ops.broadcast_to(write, cache.shape),
+                          ops.broadcast_to(ops.convert(new, cache.dtype),
+                                           cache.shape),
+                          cache)
+
+    cache_k = blend(cache_k, k)
+    cache_v = blend(cache_v, v)
+    att = _rowpos_attend(q, cache_k, cache_v, kpos, posb, n_heads=n_heads,
+                         n_kv=n_kv, d_head=d_head, window=window)
     return cache_k, cache_v, att
+
+
+# -- paged KV cache (serve_paged) ----------------------------------------------
+def paged_gather(pool: Value, page_tbl: Value) -> Value:
+    """Gather a slot-major KV view out of a page pool.
+
+    pool: (P, Hkv, ps, D) physical pages; page_tbl: (B, MP) i32 physical
+    page id per (row, logical page).  Returns (B, Hkv, MP*ps, D) where
+    index ``j`` along the seq axis is logical token position ``j`` — the
+    take-along-page-axis + reshape that makes paged attention identical
+    to attending a dense per-row cache (garbage beyond ``pos`` is masked
+    by the caller exactly like the dense path's unwritten rows).
+    """
+    P, Hkv, ps, D = pool.shape
+    B, MP = page_tbl.shape
+    g = ops.gather(pool, page_tbl, axis=0)           # (B, MP, Hkv, ps, D)
+    g = ops.transpose(g, (0, 2, 1, 3, 4))            # (B, Hkv, MP, ps, D)
+    return ops.reshape(g, (B, Hkv, MP * ps, D))
+
+
+def paged_write(pool: Value, new: Value, page_tbl: Value, pos: Value,
+                page_size: int) -> Value:
+    """Blend each row's new (B, Hkv, 1, D) k/v into its page slot.
+
+    Row ``b`` writes at physical page ``page_tbl[b, pos[b]//ps]``, offset
+    ``pos[b] % ps`` (a one-hot blend over the pool — pages are exclusive
+    to one row, so concurrent rows never collide; rows whose logical page
+    index overruns the table are clamped onto their last page-table entry,
+    which the engine points at the shared trash page for retired rows).
+    The written value is ``convert(new, pool.dtype)`` exactly — the same
+    value the dense one-hot blend writes, which is what keeps paged and
+    continuous decoding token-for-token identical.
+    """
+    P, Hkv, ps, D = pool.shape
+    B, MP = page_tbl.shape
+    psc = ops.constant(page_size, dtype="i32")
+    lp = pos / psc                       # logical page (int divide = floor)
+    off = pos - lp * psc                 # offset within the page
+    lp = ops.minimum(lp, ops.constant(MP - 1, dtype="i32"))
+    pid = ops.reshape(ops.take_along_last(page_tbl, ops.reshape(lp, (B, 1))),
+                      (B,))
+    page_oh = ops.one_hot(pid, P, dtype=pool.dtype)      # (B, P)
+    off_oh = ops.one_hot(off, ps, dtype=pool.dtype)      # (B, ps)
+    wmask = ops.einsum("bp,bs->bps", page_oh, off_oh)    # (B, P, ps)
+    newr = ops.reshape(ops.convert(new, pool.dtype), (B, Hkv, D))
+    upd = ops.einsum("bps,bhd->phsd", wmask, newr)       # (P, Hkv, ps, D)
+    hit = ops.reshape(ops.reduce_sum(wmask, axes=[0]), (P, 1, ps, 1))
+    cond = ops.greater(ops.broadcast_to(hit, pool.shape),
+                       ops.constant(0.0, dtype=pool.dtype))
+    return ops.select(cond, upd, pool)
+
+
+def paged_self_attention(
+    b: ModelBuilder, x: Value, w: Dict[str, Value], *,
+    prefix: str, n_heads: int, n_kv: int, d_head: int,
+    rope: Tuple[Value, Value], pool_k: Value, pool_v: Value,
+    page_tbl: Value, pos: Value, page_size: int,
+    window: Optional[int] = None, qkv_bias: bool = False,
+) -> Tuple[Value, Tuple[Value, Value]]:
+    """Single-token self attention through a paged KV pool.
+
+    pool_k/pool_v: (P, Hkv, ps, D) page pools; page_tbl: (B, MP) i32;
+    pos: (B,) i32 per-row positions (``rope`` must be the per-row tables
+    from :func:`rope_tables_rows`).  Writes each row's k/v into its page,
+    gathers the slot-major view back, and attends with the same masked
+    per-row math as the dense continuous path (token parity by
+    construction).  Returns (out (B,1,Dm), (new_pool_k, new_pool_v)).
+    """
+    q, k, v = project_qkv(b, x, w, prefix, n_heads, n_kv, qkv_bias)
+    q = apply_rope_rows(q, *rope)
+    k = apply_rope_rows(k, *rope)
+    pool_k = paged_write(pool_k, k, page_tbl, pos, page_size)
+    pool_v = paged_write(pool_v, v, page_tbl, pos, page_size)
+    gk = paged_gather(pool_k, page_tbl)
+    gv = paged_gather(pool_v, page_tbl)
+    B, Skv = pos.shape[0], gk.shape[2]
+    kpos = ops.iota((B, Skv), 1, "i32")
+    posb = ops.broadcast_to(ops.reshape(pos, (B, 1)), (B, Skv))
+    att = _rowpos_attend(q, gk, gv, kpos, posb, n_heads=n_heads, n_kv=n_kv,
+                         d_head=d_head, window=window)
+    out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
+    return constrain(out, BATCH_SPEC), (pool_k, pool_v)
+
+
+# -- in-graph stochastic sampling ----------------------------------------------
+def prng_uniform_rows(key: Value, pos: Value) -> Value:
+    """Per-row uniform in (0, 1) from (key, pos) — a tiny counter-based
+    in-graph hash (the classic frac-sin construction), so the stochastic
+    sampler is a pure function of its graph inputs: same key + position
+    always draws the same uniform, rows never share a stream, and the
+    chunked decode scan gets a fresh draw every step because ``pos``
+    advances.  key/pos: (B,) i32 -> (B,) f32.  (Not crypto-grade — a
+    serving-reproducibility PRNG, mirrored bit-for-bit by the engine's
+    host-side prefill sampler.  Keys hash through f32, which is exact
+    only up to 2^24 — the engine rejects larger keys at submit so two
+    keys can never silently share a stream.)"""
+    x = ops.convert(key, "f32") * ops.constant(12.9898, dtype="f32") \
+        + ops.convert(pos, "f32") * ops.constant(78.233, dtype="f32") \
+        + ops.constant(0.5, dtype="f32")
+    s = ops.sin(x) * ops.constant(43758.5453, dtype="f32")
+    u = s - ops.floor(s)
+    return ops.minimum(ops.maximum(u, ops.constant(1e-7, dtype="f32")),
+                       ops.constant(1.0 - 1e-7, dtype="f32"))
+
+
+def sample_tokens(logits: Value, temperature: Value, top_k: Value,
+                  key: Value, pos: Value) -> Value:
+    """In-graph token sampling: temperature / top-k / PRNG key are graph
+    *inputs*, so one compiled executable serves greedy and stochastic
+    requests side by side (per row).
+
+    logits (B, 1, V); temperature (B,) f32 (``0`` = greedy argmax — the
+    parity baseline); top_k (B,) i32 (``0`` = full vocabulary); key/pos
+    (B,) i32.  Returns (B, 1) i32 sampled token ids.
+
+    Stochastic rows sample by inverse CDF: softmax of the top-k-masked,
+    temperature-scaled logits, then the first index whose cumulative
+    probability crosses the row's uniform draw (``min(#cdf<u, V-1)`` —
+    robust to the cumulative sum topping out just below 1).  The dynamic
+    top-k threshold is the row's k-th largest logit via a full descending
+    sort (O(V log V) — fine at serving vocab sizes; values tied with the
+    threshold are kept, the standard top-k convention).
+    """
+    B, V = logits.shape[0], logits.shape[-1]
+    lg = ops.reshape(ops.convert(logits, "f32"), (B, V))
+    greedy = ops.argmax(lg, -1)                              # (B,) i32
+    svals, _ = ops.top_k(lg, V)                              # descending sort
+    full = ops.broadcast_to(ops.constant(V, dtype="i32"), (B,))
+    keff = ops.select(ops.greater(top_k, ops.constant(0, dtype="i32")),
+                      ops.minimum(top_k, full), full)
+    kth = ops.take_along_last(svals, ops.reshape(
+        keff - ops.constant(1, dtype="i32"), (B, 1)))        # (B, 1)
+    masked = ops.select(ops.greater_equal(lg, ops.broadcast_to(kth, (B, V))),
+                        lg, ops.constant(-1e30, dtype="f32"))
+    temp = ops.maximum(temperature, ops.constant(1e-6, dtype="f32"))
+    p = ops.softmax(masked / ops.reshape(temp, (B, 1)), axis=-1)
+    u = prng_uniform_rows(key, pos)
+    below = ops.convert(ops.less(ops.cumsum(p, -1),
+                                 ops.reshape(u, (B, 1))), "i32")
+    pick = ops.minimum(ops.reduce_sum(below, axes=[1]),
+                       ops.constant(V - 1, dtype="i32"))
+    tok = ops.select(ops.greater(temperature,
+                                 ops.constant(0.0, dtype="f32")),
+                     pick, greedy)
+    return ops.reshape(tok, (B, 1))
 
 
 def cross_attention(

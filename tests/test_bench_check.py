@@ -32,6 +32,28 @@ def test_committed_snapshot_is_valid():
     ({"schema_version": 1, "sections": ["serving"],
       "rows": [{"section": "E10_serving", "name": "lockstep_tok_s",
                 "value": "oops", "unit": ""}]}, "not numeric"),
+    ({"schema_version": 1, "sections": ["paged"],
+      "rows": [{"section": "E12_paged", "name": "paged_tok_s",
+                "value": "5", "unit": "tok/s"}]},
+     "paged row missing: 'paged_kv_bytes_per_active_token'"),
+    ({"schema_version": 1, "sections": ["paged"],
+      "rows": [{"section": "E12_paged", "name": n, "value": v, "unit": ""}
+               for n, v in [("paged_tok_s", "5"),
+                            ("paged_decode_tok_s", "5"),
+                            ("paged_kv_bytes_per_active_token", "900"),
+                            ("continuous_kv_bytes_per_active_token", "600"),
+                            ("paged_kv_bytes_ratio", "1.5"),
+                            ("paged_matches_continuous", "1")]]},
+     "paged_kv_bytes_ratio must be < 1"),
+    ({"schema_version": 1, "sections": ["paged"],
+      "rows": [{"section": "E12_paged", "name": n, "value": v, "unit": ""}
+               for n, v in [("paged_tok_s", "5"),
+                            ("paged_decode_tok_s", "5"),
+                            ("paged_kv_bytes_per_active_token", "600"),
+                            ("continuous_kv_bytes_per_active_token", "900"),
+                            ("paged_kv_bytes_ratio", "0.66"),
+                            ("paged_matches_continuous", "2")]]},
+     "paged_matches_continuous must be 1"),
 ])
 def test_edited_snapshot_fails_with_readable_diff(tmp_path, doc, expect):
     path = tmp_path / "edited.json"
@@ -50,6 +72,78 @@ def test_unparseable_snapshot_fails_readably(tmp_path):
     assert r.returncode == 1
     assert "Traceback" not in r.stderr
     assert "not valid JSON" in r.stderr
+
+
+MATRIX = os.path.join(REPO, "scripts", "check_serving_matrix.py")
+
+
+def _matrix(*paths):
+    return subprocess.run([sys.executable, MATRIX, *paths],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+def _report(mode, results, pool=None, kv=None, temperature=0.0):
+    doc = {"mode": mode, "results": results,
+           "kv_bytes_per_active_token": kv,
+           "pool": pool,
+           "workload": {"requests": len(results), "prompt_len": 4, "gen": 6,
+                        "slots": 2, "temperature": temperature, "top_k": 0}}
+    return doc
+
+
+def _paged_pool(**over):
+    pool = {"pages_in_use": 0, "page_allocs": 9, "page_frees": 9,
+            "page_size": 4, "slots": 2, "peak_pages_in_use": 6}
+    pool.update(over)
+    return pool
+
+
+def test_serving_matrix_gate(tmp_path):
+    """scripts/check_serving_matrix.py: greedy parity + page-leak bounds
+    over the EngineReport artifacts, with readable failures."""
+    res = {"0": [1, 2, 3], "1": [4, 5, 6], "2": [7, 8, 9]}
+    good = {
+        "cont": _report("continuous", res, kv=1365.0),
+        "don": _report("donated", res),
+        "paged": _report("paged", res, pool=_paged_pool(), kv=930.0),
+    }
+    paths = {}
+    for name, doc in good.items():
+        p = tmp_path / f"{name}.json"
+        p.write_text(json.dumps(doc))
+        paths[name] = str(p)
+    r = _matrix(*paths.values())
+    assert r.returncode == 0, r.stderr
+
+    # a diverged paged stream must fail with the offending request named
+    bad = _report("paged", dict(res, **{"1": [4, 5, 7]}),
+                  pool=_paged_pool(), kv=930.0)
+    (tmp_path / "paged.json").write_text(json.dumps(bad))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "req 1 diverged" in r.stderr
+
+    # leaked pages must fail even when tokens agree
+    leak = _report("paged", res,
+                   pool=_paged_pool(pages_in_use=2, page_frees=7), kv=930.0)
+    (tmp_path / "paged.json").write_text(json.dumps(leak))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "leak" in r.stderr
+
+    # paged not actually saving KV bytes must fail
+    fat = _report("paged", res, pool=_paged_pool(), kv=2000.0)
+    (tmp_path / "paged.json").write_text(json.dumps(fat))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "not strictly fewer" in r.stderr
+
+    # a matrix without the paged leg must fail (the gate exists for it)
+    r = _matrix(paths["cont"], paths["don"])
+    assert r.returncode == 1 and "mode=paged" in r.stderr
+
+    # ... and dropping the continuous leg must fail rather than silently
+    # skipping the KV-bytes comparison
+    (tmp_path / "paged.json").write_text(json.dumps(good["paged"]))
+    r = _matrix(paths["don"], paths["paged"])
+    assert r.returncode == 1 and "continuous leg" in r.stderr
 
 
 def test_autotune_dir_validation(tmp_path):

@@ -109,7 +109,7 @@ def test_submit_validation_and_modes():
         eng.submit(np.zeros(2, np.int32), 0)
     with pytest.raises(ValueError):
         ServeEngine(CFG, mode="warp")
-    assert MODES == ("lockstep", "donated", "continuous")
+    assert MODES == ("lockstep", "donated", "continuous", "paged")
 
 
 def test_lockstep_runs_multimodal_families():

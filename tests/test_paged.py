@@ -1,0 +1,321 @@
+"""Paged serving correctness: the paged KV pool + chunked scheduler must
+be invisible to greedy outputs (token-for-token identical to continuous
+mode and to each request run alone, at any page size / chunk length);
+in-graph stochastic sampling must be a pure function of the request's
+PRNG key; and the page accounting must balance to zero under mid-flight
+admission."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import KVCachePool, PagedKVPool, ServeEngine
+
+CFG = get_config("deepseek-7b").reduced()
+
+# ragged mixed-length workload on 2 slots: late admissions + slot reuse
+WORKLOAD = [(4, 6), (6, 9), (5, 7), (8, 4)]
+SLOTS, MAX_LEN = 2, 16
+
+
+def _prompts(seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, CFG.vocab, size=(p,)).astype(np.int32), g)
+            for p, g in WORKLOAD]
+
+
+@pytest.fixture(scope="module")
+def continuous_results():
+    eng = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="continuous",
+                      seed=0)
+    rids = [eng.submit(p, g) for p, g in _prompts()]
+    rep = eng.run()
+    return [rep.results[r] for r in rids]
+
+
+@pytest.mark.parametrize("page_size, chunk_steps", [(4, 3), (8, 2)])
+def test_paged_greedy_matches_continuous(continuous_results, page_size,
+                                         chunk_steps):
+    """Two page sizes, two chunk lengths: paged greedy output must be
+    token-for-token identical to continuous mode on the same ragged
+    workload (the pool layout and dispatch granularity are invisible)."""
+    eng = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                      seed=0, page_size=page_size, chunk_steps=chunk_steps)
+    rids = [eng.submit(p, g) for p, g in _prompts()]
+    rep = eng.run()
+    assert rep.late_admissions >= 1  # 4 requests on 2 slots
+    for got, want in zip([rep.results[r] for r in rids],
+                         continuous_results):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_paged_matches_each_request_alone(continuous_results):
+    """Batching through shared pages must leak nothing between rows:
+    every request's paged output equals running it alone."""
+    for i, (p, g) in enumerate(_prompts()):
+        alone = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                            seed=0, page_size=4, chunk_steps=3)
+        rid = alone.submit(p, g)
+        np.testing.assert_array_equal(alone.run().results[rid],
+                                      continuous_results[i],
+                                      err_msg=f"request {i} diverged alone")
+
+
+def test_stochastic_sampling_deterministic_and_isolated():
+    """Same PRNG key => same tokens across engine instances; a different
+    key draws a different stream; temperature=0 stays exact argmax even
+    with a key set; and a stochastic row never perturbs the greedy row
+    sharing its batch."""
+    (pa, ga), (pb, gb) = _prompts()[:2]
+
+    def run(key_a, temp_a):
+        eng = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                          seed=0, page_size=4, chunk_steps=3)
+        ra = eng.submit(pa, ga, temperature=temp_a, top_k=8, key=key_a) \
+            if temp_a else eng.submit(pa, ga, key=key_a)
+        rb = eng.submit(pb, gb)  # greedy row in the same batch
+        rep = eng.run()
+        return rep.results[ra], rep.results[rb]
+
+    greedy_a, greedy_b = run(key_a=0, temp_a=0.0)
+    hot1_a, hot1_b = run(key_a=123, temp_a=0.9)
+    hot2_a, hot2_b = run(key_a=123, temp_a=0.9)
+    other_a, other_b = run(key_a=124, temp_a=0.9)
+
+    np.testing.assert_array_equal(hot1_a, hot2_a)  # same key, same stream
+    assert not np.array_equal(hot1_a, other_a), \
+        "different PRNG keys drew identical streams"
+    # the greedy neighbour is identical no matter what row A samples
+    for b_stream in (hot1_b, hot2_b, other_b):
+        np.testing.assert_array_equal(b_stream, greedy_b)
+    # temperature 0 with a key set is still exact argmax
+    keyed_a, _ = run(key_a=55, temp_a=0.0)
+    np.testing.assert_array_equal(keyed_a, greedy_a)
+
+
+def test_oversized_request_rejected_at_submit():
+    """A request needing more pages than the (user-shrunk) pool holds
+    can never be admitted — it must be rejected at submit, not spin the
+    scheduler forever."""
+    eng = ServeEngine(CFG, slots=2, max_len=32, mode="paged", seed=0,
+                      page_size=8, chunk_steps=2, pages=4)  # 3 usable
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(np.zeros(10, np.int32), 22)  # needs 4 pages
+    rid = eng.submit(np.zeros(4, np.int32), 4)  # 1 page: fine
+    assert len(eng.run().results[rid]) == 4
+
+
+def test_paged_all_prefill_workload_reports_cleanly():
+    """max_new=1 everywhere: every request finishes straight out of
+    prefill, no decode dispatch runs, and the report must still be
+    consistent (kv_bytes_per_active_token None, pool drained)."""
+    eng = ServeEngine(CFG, slots=2, max_len=8, mode="paged", seed=0,
+                      page_size=4, chunk_steps=2)
+    rng = np.random.default_rng(3)
+    rids = [eng.submit(rng.integers(0, CFG.vocab, size=(4,)), 1)
+            for _ in range(3)]
+    rep = eng.run()
+    assert all(len(rep.results[r]) == 1 for r in rids)
+    assert rep.kv_bytes_per_active_token is None
+    assert rep.pool.pages_in_use == 0
+    assert rep.pool.page_allocs == rep.pool.page_frees
+
+
+def test_sampling_rejected_outside_paged_mode():
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="continuous", seed=0)
+    with pytest.raises(ValueError, match="paged"):
+        eng.submit(np.zeros(2, np.int32), 2, temperature=0.7)
+    # paged-only constructor knobs are never silently ignored either
+    with pytest.raises(ValueError, match="mode='paged'"):
+        ServeEngine(CFG, slots=1, max_len=8, mode="continuous", page_size=4)
+    with pytest.raises(ValueError, match="mode='paged'"):
+        ServeEngine(CFG, slots=1, max_len=8, mode="donated", pages=4)
+    peng = ServeEngine(CFG, slots=1, max_len=8, mode="paged", seed=0,
+                       page_size=4, chunk_steps=2)
+    with pytest.raises(ValueError):
+        peng.submit(np.zeros(2, np.int32), 2, temperature=-0.1)
+    with pytest.raises(ValueError):
+        peng.submit(np.zeros(2, np.int32), 2, top_k=-1)
+    # keys hash through f32 (exact to 2^24): out-of-range keys would
+    # silently collide, so they are rejected loudly
+    with pytest.raises(ValueError, match="2\\^24"):
+        peng.submit(np.zeros(2, np.int32), 2, key=1 << 24)
+    with pytest.raises(ValueError, match="2\\^24"):
+        peng.submit(np.zeros(2, np.int32), 2, key=-1)
+
+
+def test_page_accounting_under_mid_flight_admission():
+    """4 ragged requests through 2 slots: every page allocated comes
+    back, the peak respects the partial-page bound, and the report's
+    KV-bytes metric beats the fixed-row pool's on the same workload."""
+    eng = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                      seed=0, page_size=4, chunk_steps=3)
+    rids = [eng.submit(p, g) for p, g in _prompts()]
+    saw_pages_in_flight = 0
+    while any(not eng._requests[r].done for r in rids):
+        eng.step()
+        p = eng.pool.stats()
+        saw_pages_in_flight = max(saw_pages_in_flight, p.pages_in_use)
+        assert 0.0 <= p.fragmentation < 1.0, "sampled over dispatches"
+        # in-use pages never exceed one partial page per active request
+        used = sum(eng._requests[r].pos for r in rids
+                   if eng._requests[r].slot is not None)
+        assert p.pages_in_use <= -(-used // p.page_size) + p.slots
+    rep = eng.run()
+    p = rep.pool
+    assert saw_pages_in_flight > 0
+    assert (p.allocs, p.frees, p.active) == (len(WORKLOAD), len(WORKLOAD), 0)
+    assert p.pages_in_use == 0 and p.page_allocs == p.page_frees
+    # fragmentation is averaged over decode dispatches, so it stays
+    # meaningful (> 0: pages are reserved ahead of the chunk's writes)
+    # even though every page is back on the free list by now
+    assert 0.0 < p.fragmentation < 1.0
+    total_tokens = sum(pl + g for pl, g in WORKLOAD)
+    assert p.peak_pages_in_use <= -(-total_tokens // p.page_size) + p.slots
+    assert rep.late_admissions >= 1
+    # the memory headline: strictly fewer KV bytes per active token than
+    # the fixed-row pool reserving MAX_LEN rows per slot
+    cont = ServeEngine(CFG, slots=SLOTS, max_len=MAX_LEN, mode="continuous",
+                       seed=0)
+    for pr, g in _prompts():
+        cont.submit(pr, g)
+    crep = cont.run()
+    assert rep.kv_bytes_per_active_token < crep.kv_bytes_per_active_token
+
+
+def test_serve_paged_graph_matches_serve_graph():
+    """Graph-level parity for the single-step ``serve_paged`` kind: the
+    page-table gather/write attention must emit the same greedy tokens
+    as the dense ``serve`` graph when the page table maps each row onto
+    its own pages (temperature 0 through the in-graph sampler)."""
+    from repro.backend import Backend
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+
+    cfg = CFG
+    B, P, G, total, ps = 2, 8, 6, 16, 4
+    mp = total // ps
+    rng = np.random.default_rng(0)
+    jt = Backend.create("jax")
+
+    pre = build_graphs(cfg, ShapeConfig("prefill", "prefill", P, B), B)
+    params = pre.builder.init_params(0)
+    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
+    pouts = jt.compile(pre.fn)(
+        prompts, *[params[n] for n in pre.builder.param_names()])
+    tok = np.argmax(np.asarray(pouts[0]).reshape(B, -1), -1) \
+        .astype(np.int32).reshape(B, 1)
+
+    srv = build_graphs(cfg, ShapeConfig("serve", "serve", total, B), B)
+    pag = build_graphs(
+        cfg, ShapeConfig("pagedsrv", "serve_paged", total, B, page_size=ps),
+        B)
+    assert pag.aux["page_size"] == ps and pag.aux["max_pages"] == mp
+    sex, pex = jt.compile(srv.fn), jt.compile(pag.fn)
+    sparams = srv.builder.init_params(0)
+    pparams = pag.builder.init_params(0)
+
+    # dense serve caches: prefill rows at the front of each row's cache
+    sc = []
+    for node in srv.builder.inputs:
+        if node.name in ("token", "pos"):
+            continue
+        t = node.out_types[0]
+        buf = np.zeros(t.shape, t.dtype)
+        pc = np.asarray(pouts[1 + srv.aux["cache_names"].index(node.name)])
+        buf[:, :, :, :P, :] = pc
+        sc.append(buf)
+    # paged caches: row b owns pages [1 + b*mp, 1 + (b+1)*mp); scatter
+    # the prefill rows page by page (page 0 stays the trash page)
+    ptbl = np.array([[1 + b * mp + j for j in range(mp)] for b in range(B)],
+                    np.int32)
+    pc_list = []
+    for i, name in enumerate(pag.aux["cache_names"]):
+        t = [n for n in pag.builder.inputs if n.name == name][0].out_types[0]
+        buf = np.zeros(t.shape, t.dtype)
+        pre_c = np.asarray(pouts[1 + i])  # (L, B, Hkv, P, D)
+        for b in range(B):
+            for j, start in enumerate(range(0, P, ps)):
+                n = min(ps, P - start)
+                buf[:, ptbl[b, j], :, :n, :] = \
+                    pre_c[:, b, :, start:start + n, :]
+        pc_list.append(buf)
+
+    zeros = np.zeros((B,), np.int32)
+    tok_s, tok_p = tok.copy(), tok.copy()
+    for step in range(G):
+        pos = np.full((B,), P + step, np.int32)
+        souts = sex(tok_s, pos, *sc,
+                    *[sparams[n] for n in srv.builder.param_names()])
+        tok_s = np.asarray(souts[0])
+        sc = [np.asarray(o) for o in souts[1:]]
+        pouts_g = pex(tok_p, pos, ptbl, zeros.astype(np.float32), zeros,
+                      zeros, *pc_list,
+                      *[pparams[n] for n in pag.builder.param_names()])
+        tok_p = np.asarray(pouts_g[0])
+        pc_list = [np.asarray(o) for o in pouts_g[1:]]
+        assert np.array_equal(tok_s, tok_p), f"diverged at step {step}"
+
+
+class _T:
+    """Stand-in for a compiled input type (shape/dtype/nbytes)."""
+
+    def __init__(self, shape, dtype="float32"):
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+
+def test_paged_pool_reservation_and_free():
+    """Host-side pool unit test: admission reserves the request's whole
+    lifetime (lazy growth can never strand an admitted request), frees
+    return pages, and invalid frees raise."""
+    # 9 physical pages = trash page + 8 usable, page_size 4, 2 slots
+    pool = PagedKVPool(["k"], [_T((2, 9, 1, 4, 2))], slots=2, page_size=4,
+                       max_pages=4)
+    assert pool.pages_in_use == 0 and pool.stats().pages == 8
+    assert pool.can_admit(16)
+    # oversized requests fail loudly instead of clamping onto the last
+    # page-table entry (which would corrupt the request's own rows)
+    with pytest.raises(ValueError, match="max_pages"):
+        pool.can_admit(17)
+    with pytest.raises(ValueError, match="max_pages"):
+        pool.alloc(33)
+
+    a = pool.alloc(16)           # reserves 4 pages, allocates none yet
+    assert pool.pages_in_use == 0
+    assert pool.can_admit(16)
+    pool.ensure_pages(a, 5)      # rows 0..5 -> 2 pages
+    assert pool.pages_in_use == 2
+    assert 0 not in pool.page_table[a, :2]  # trash page never handed out
+    pool.ensure_pages(a, 5)      # idempotent
+    assert pool.pages_in_use == 2
+
+    b = pool.alloc(16)
+    pool.ensure_pages(b, 15)     # all 4 reserved pages
+    assert pool.pages_in_use == 6
+    with pytest.raises(RuntimeError):
+        pool.alloc(4)            # no slots left
+    pool.free(a)
+    assert pool.pages_in_use == 4 and pool.active == 1
+    assert np.all(pool.page_table[a] == 0)  # back to the trash page
+    with pytest.raises(ValueError):
+        pool.free(a)             # double free
+    with pytest.raises(ValueError):
+        pool.free(99)            # out of range
+    pool.free(b)
+    assert pool.pages_in_use == 0 and pool.stats().page_frees == 6
+
+
+def test_kv_pool_invalid_free_raises():
+    """The fixed-row pool's silent out-of-range free is gone: leaks must
+    surface as exceptions, not occupancy drift."""
+    pool = KVCachePool(["k"], [_T((2, 1, 8, 4))],
+                       [("batch", None, "kv_seq", None)])
+    s = pool.alloc()
+    pool.free(s)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(s)
+    with pytest.raises(ValueError, match="out-of-range"):
+        pool.free(5)
+    with pytest.raises(ValueError, match="out-of-range"):
+        pool.free(-1)

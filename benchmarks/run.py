@@ -386,6 +386,8 @@ def bench_serving():
         emit("E10_serving", f"{mode}_decode_tok_s", rep.decode_tok_s, "tok/s")
         emit("E10_serving", f"{mode}_p50_ms", rep.p50_ms, "ms")
         emit("E10_serving", f"{mode}_p95_ms", rep.p95_ms, "ms")
+        emit("E10_serving", f"{mode}_ttft_p50_ms", rep.ttft_p50_ms, "ms")
+        emit("E10_serving", f"{mode}_ttft_p95_ms", rep.ttft_p95_ms, "ms")
         return rep
 
     reps = {}
@@ -459,6 +461,7 @@ def bench_paged():
                  "tok/s")
             emit("E12_paged", f"{mode}_kv_bytes_per_active_token",
                  rep.kv_bytes_per_active_token, "B/tok")
+            emit("E12_paged", f"{mode}_ttft_p95_ms", rep.ttft_p95_ms, "ms")
         return rids, rep
 
     paged_kw = dict(page_size=PS, chunk_steps=K)
@@ -485,6 +488,60 @@ def bench_paged():
     emit("E12_paged", "page_frees", p.page_frees, "")
     assert p.pages_in_use == 0 and p.page_allocs == p.page_frees, \
         "page leak: pool did not drain"
+
+
+def bench_server():
+    """E13: the HTTP front door under over-subscription.
+
+    Three times more concurrent streaming clients than the engine has
+    slots, all firing at once against a paged-mode server — the row set
+    is the serving-SLO headline (TTFT p50/p95 as each client saw it,
+    inter-token spacing, sustained tok/s from the server's rolling
+    window) plus the two invariants the subsystem exists to keep: every
+    greedy stream token-identical to driving the ServeEngine directly,
+    and a graceful drain that returns every KV page."""
+    from repro.configs import get_config
+    from repro.launch import loadgen
+    from repro.launch.engine import ServeEngine
+    from repro.launch.server import running_server
+
+    cfg = get_config("deepseek-7b").reduced()
+    SLOTS, P, G, CLIENTS = 2, 8, 24, 6
+
+    def make_engine():
+        return ServeEngine(cfg, slots=SLOTS, max_len=P + G, mode="paged",
+                           seed=0, page_size=8, chunk_steps=4)
+
+    prompts = loadgen.make_prompts(CLIENTS, P, cfg.vocab, seed=0)
+    # the direct-engine reference: parity baseline + compile/XLA warm-up
+    # (Backend.create memoizes, so the served engine reuses the cache)
+    ref = make_engine()
+    rrids = [ref.submit(p, G) for p in prompts]
+    rrep = ref.run()
+
+    eng = make_engine()
+    with running_server(eng, max_wait_queue=CLIENTS) as srv:
+        res = loadgen.run_load(srv.base_url, prompts, G)
+    assert not res.errors, f"load run failed: {res.errors}"
+    assert res.statuses == {200: CLIENTS}, res.statuses
+
+    emit("E13_server", "server_clients", CLIENTS, "clients")
+    emit("E13_server", "server_slots", SLOTS, "slots")
+    emit("E13_server", "server_tok_s", res.tok_s, "tok/s")
+    emit("E13_server", "server_sustained_tok_s",
+         srv.stats.snapshot()["sustained_tok_s"], "tok/s")
+    emit("E13_server", "server_ttft_p50_ms", res.ttft_p50_ms, "ms")
+    emit("E13_server", "server_ttft_p95_ms", res.ttft_p95_ms, "ms")
+    emit("E13_server", "server_tok_p50_ms", res.gap_p50_ms, "ms")
+    emit("E13_server", "server_tok_p95_ms", res.gap_p95_ms, "ms")
+    match = all(res.results[str(i)] == rrep.results[r].tolist()
+                for i, r in enumerate(rrids))
+    emit("E13_server", "server_matches_engine", int(match), "bool")
+    assert match, "served greedy streams diverged from the direct engine"
+    emit("E13_server", "server_drain_clean", int(bool(srv.drain_ok)), "bool")
+    assert srv.drain_ok, "drain left pages/slots in use"
+    emit("E13_server", "server_late_admissions",
+         srv.engine_report.late_admissions, "reqs")
 
 
 def bench_scaling():
@@ -547,6 +604,7 @@ SECTIONS = {
     "compile_cache": bench_compile_cache,
     "serving": bench_serving,
     "paged": bench_paged,
+    "server": bench_server,
     "autotune": bench_autotune,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,

@@ -12,12 +12,22 @@ top-k / PRNG key) are per-request graph inputs — greedy requests stay
 token-for-token identical to continuous mode while the pool reserves
 fewer KV bytes per token actually cached.
 
+The final section puts the HTTP front door (``launch/server.py``) over
+a paged engine and talks to it like a network client would: a streaming
+``POST /v1/generate`` consumed token by token over SSE, a ``text``
+prompt, and the ``GET /v1/metrics`` SLO snapshot — then drains the
+server and shows the pool came back empty.
+
 Run:  PYTHONPATH=src python examples/serving_demo.py
 """
+import asyncio
+
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch import loadgen
 from repro.launch.engine import ServeEngine
+from repro.launch.server import running_server
 
 
 def main():
@@ -73,6 +83,33 @@ def main():
           f"fragmentation={pp.fragmentation:.2f}")
     print(f"kv bytes per active token: {prep.kv_bytes_per_active_token:.0f} "
           f"paged vs {kv_cont:.0f} continuous")
+
+    # --- the HTTP front door: streaming clients over the network edge ---
+    print("--- http server ---")
+    engine = ServeEngine(cfg, slots=2, max_len=24, mode="paged", seed=0,
+                         page_size=4, chunk_steps=4)
+    with running_server(engine, max_wait_queue=4) as srv:
+        print(f"listening on {srv.base_url}")
+        # a token-ids client, streamed over SSE (chunked transfer)
+        prompt, max_new = workload[0]
+        res = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"prompt": [int(t) for t in prompt],
+                           "max_new": max_new, "tag": "demo"}))
+        print(f"streamed {len(res.tokens)} tokens: {res.tokens} "
+              f"(ttft {res.ttft_ms:.1f}ms)")
+        # a text client: bytes folded into the vocabulary
+        res = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"text": "hello ngraph", "max_new": 6}))
+        print(f"text prompt -> {res.tokens}")
+        metrics = loadgen.fetch_json(srv.base_url, "/v1/metrics")
+        s = metrics["server"]
+        print(f"metrics: {s['requests_completed']} completed, "
+              f"ttft p95 {s['ttft_p95_ms']:.1f}ms, "
+              f"tok p95 {s['tok_p95_ms']:.2f}ms, "
+              f"sustained {s['sustained_tok_s']:.1f} tok/s, "
+              f"engine {metrics['engine']}")
+    print(f"drained: drain_ok={srv.drain_ok} "
+          f"pages_in_use={engine.pool.pages_in_use}")
 
 
 if __name__ == "__main__":

@@ -8,9 +8,12 @@ so the perf trajectory is tracked in-repo across PRs.
 committed snapshot's format without running anything (used by CI): the
 schema must parse, the serving section must contain lockstep/donated/
 continuous tok/s rows with positive values, the donated speedup row must
-be present, and the paged section (E12) must carry the
+be present, the paged section (E12) must carry the
 kv-bytes-per-active-token rows with ``paged_kv_bytes_ratio < 1`` and
-greedy parity == 1.  Every failure is a readable ``CHECK FAIL`` line naming
+greedy parity == 1, and the server section (E13) must show an
+over-subscribed load run with TTFT/sustained-throughput rows,
+server-vs-engine parity == 1, and a clean drain.  Every failure is a
+readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
 diff, never a bare traceback), and the exit code is non-zero.
 
@@ -33,6 +36,7 @@ REQUIRED_SERVING_ROWS = (
     "lockstep_tok_s", "lockstep_decode_tok_s",
     "donated_tok_s", "donated_decode_tok_s",
     "continuous_tok_s", "continuous_decode_tok_s",
+    "continuous_ttft_p50_ms", "continuous_ttft_p95_ms",
     "donated_speedup_x",
 )
 # E12: the paged-pool section.  The ratio row is the headline — the paged
@@ -44,6 +48,18 @@ REQUIRED_PAGED_ROWS = (
     "paged_kv_bytes_per_active_token",
     "continuous_kv_bytes_per_active_token",
     "paged_kv_bytes_ratio", "paged_matches_continuous",
+    "paged_ttft_p95_ms",
+)
+# E13: the HTTP front door under over-subscription.  TTFT/sustained-tok/s
+# are the SLO headline; the two *_1 rows are invariants (greedy streams
+# token-identical to the direct engine, drain returned every page) and
+# are re-asserted below like the paged parity row.
+REQUIRED_SERVER_ROWS = (
+    "server_clients", "server_slots",
+    "server_tok_s", "server_sustained_tok_s",
+    "server_ttft_p50_ms", "server_ttft_p95_ms",
+    "server_tok_p95_ms",
+    "server_matches_engine", "server_drain_clean",
 )
 
 
@@ -164,6 +180,23 @@ def check(path: str) -> int:
         if parity is not None and parity != 1:
             errors.append(f"paged row paged_matches_continuous must be 1 "
                           f"(greedy token parity), got {parity}")
+    if "server" in (doc.get("sections") or []):
+        vals = require("server", "E13_server", REQUIRED_SERVER_ROWS)
+        parity = vals.get("server_matches_engine")
+        if parity is not None and parity != 1:
+            errors.append(f"server row server_matches_engine must be 1 "
+                          f"(served greedy streams token-identical to the "
+                          f"direct engine), got {parity}")
+        drain = vals.get("server_drain_clean")
+        if drain is not None and drain != 1:
+            errors.append(f"server row server_drain_clean must be 1 "
+                          f"(graceful drain returns every KV page), "
+                          f"got {drain}")
+        clients = vals.get("server_clients")
+        slots = vals.get("server_slots")
+        if clients is not None and slots is not None and clients <= slots:
+            errors.append(f"server section must over-subscribe the engine "
+                          f"(clients {clients} <= slots {slots})")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -201,7 +234,8 @@ def check_autotune_dir(tune_dir: str) -> int:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sections", nargs="+", default=["serving", "paged"])
+    ap.add_argument("--sections", nargs="+",
+                    default=["serving", "paged", "server"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

@@ -15,7 +15,14 @@ contract the modes share:
     never exceeded ``ceil(total_tokens / page_size) + slots`` (each
     active request can waste at most one partial page);
   * paged reserved fewer KV bytes per active token than the fixed-row
-    continuous pool on the same workload.
+    continuous pool on the same workload;
+  * the HTTP front door leg (``mode == "server"``, written by
+    ``repro.launch.serve --serve-http --report-json`` after a SIGTERM
+    drain) streamed the same greedy tokens as the direct-engine legs
+    (its ``results`` are keyed by client tag, so concurrent arrival
+    order cannot scramble the comparison), drained cleanly
+    (``drain_ok`` with ``pages_in_use == 0``), and recorded a positive
+    TTFT p95.
 
 Every failure is a readable ``MATRIX FAIL`` line; exit code 1 on any.
 """
@@ -108,6 +115,29 @@ def check(paths) -> int:
             errors.append(
                 f"paged reserved {pb:.1f} KV B/active-token — not "
                 f"strictly fewer than continuous's {cb:.1f}")
+
+    srv = reports.get("server")
+    if srv is None:
+        errors.append(f"no server report among {sorted(reports)} — the "
+                      f"matrix must exercise the HTTP front door "
+                      f"(mode=server)")
+    else:
+        if srv.get("drain_ok") is not True:
+            errors.append("server: drain_ok is not true — graceful drain "
+                          "left engine state behind")
+        if srv.get("engine_mode") == "paged":
+            pool = srv.get("pool") or {}
+            if pool.get("pages_in_use") != 0:
+                errors.append(
+                    f"server: {pool.get('pages_in_use')} pages still in "
+                    f"use after drain (leak)")
+        stats = srv.get("server") or {}
+        if not stats.get("ttft_p95_ms", 0) > 0:
+            errors.append(f"server: ttft_p95_ms missing or not positive "
+                          f"(got {stats.get('ttft_p95_ms')!r})")
+        if stats.get("requests_completed", 0) < 1:
+            errors.append("server: no requests completed — the leg must "
+                          "actually stream")
 
     if errors:
         for e in errors:

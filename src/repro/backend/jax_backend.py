@@ -23,6 +23,62 @@ class JaxBackend(Backend):
     name = "jax"
     default_level = "O1"
 
+    def __init__(self, **backend_opts):
+        device = backend_opts.pop("device", None)
+        if backend_opts:
+            raise TypeError(
+                f"unknown jax backend opts {sorted(backend_opts)}; "
+                f"supported: ['device']")
+        self.device = (self._resolve_device(device)
+                       if device is not None else None)
+        opts = {}
+        if self.device is not None:
+            # normalize to "platform:id" whichever spelling the caller
+            # used, so the instance memo and the disk-cache entry key see
+            # one stable string per physical device
+            opts["device"] = f"{self.device.platform}:{self.device.id}"
+        super().__init__(**opts)
+
+    @staticmethod
+    def _resolve_device(spec):
+        """``device=`` opt -> a concrete ``jax.Device``.
+
+        Accepts a ``jax.Device``, an index into ``jax.devices()``, or a
+        ``"platform[:index]"`` string (``"cpu"``, ``"cpu:1"``, ``"gpu:0"``).
+        Unknown ids fail here, at ``Backend.create`` time, with the
+        available devices listed — not at first dispatch."""
+        import jax
+
+        devices = jax.devices()
+        avail = [f"{d.platform}:{d.id}" for d in devices]
+        if isinstance(spec, jax.Device):
+            if spec not in devices:
+                raise ValueError(
+                    f"device {spec!r} is not attached; available: {avail}")
+            return spec
+        if isinstance(spec, (int, np.integer)) \
+                and not isinstance(spec, bool):
+            if not 0 <= int(spec) < len(devices):
+                raise ValueError(
+                    f"device index {int(spec)} out of range; "
+                    f"available: {avail}")
+            return devices[int(spec)]
+        if isinstance(spec, str):
+            plat, _, idx_s = spec.lower().partition(":")
+            if idx_s and not idx_s.isdigit():
+                raise ValueError(
+                    f"malformed device {spec!r} (want 'platform[:index]'); "
+                    f"available: {avail}")
+            idx = int(idx_s) if idx_s else 0
+            matches = [d for d in devices if d.platform.lower() == plat]
+            if idx < len(matches):
+                return matches[idx]
+            raise ValueError(
+                f"unknown device {spec!r}; available: {avail}")
+        raise TypeError(
+            f"device must be a jax.Device, int index, or "
+            f"'platform[:index]' string, got {type(spec).__name__}")
+
     def _codegen(self, fn: Function, options: CompileOptions
                  ) -> Tuple[Callable, Optional[Callable], Optional[Callable]]:
         import jax
@@ -42,6 +98,13 @@ class JaxBackend(Backend):
                 kw["in_shardings"] = options.in_shardings
             if options.out_shardings is not None:
                 kw["out_shardings"] = options.out_shardings
+            if self.device is not None and "out_shardings" not in kw:
+                # pin via a single-device output sharding (the supported
+                # spelling — jit's `device=` kwarg is deprecated): inputs
+                # follow the outputs' placement, so donated KV chains
+                # stay resident on the pinned device
+                kw["out_shardings"] = \
+                    jax.sharding.SingleDeviceSharding(self.device)
             run = jax.jit(run, donate_argnums=options.donate_argnums, **kw)
             lower = run.lower
 
@@ -51,12 +114,14 @@ class JaxBackend(Backend):
         return call, run, lower
 
     # -- persistent-cache AOT hooks ------------------------------------------
-    @staticmethod
-    def _exportable(options: CompileOptions) -> bool:
+    def _exportable(self, options: CompileOptions) -> bool:
         """AOT serialization covers the plain single-device jit path only:
-        meshes/shardings don't rehydrate portably, and an exported module
-        drops donation (a donated hot loop must re-jit from the graph)."""
-        return (options.static_jit and options.mode == "jit"
+        meshes/shardings don't rehydrate portably, an exported module
+        drops donation (a donated hot loop must re-jit from the graph),
+        and a blob loaded on a device-pinned backend would silently run
+        on the default device instead of the pinned one."""
+        return (self.device is None
+                and options.static_jit and options.mode == "jit"
                 and options.mesh is None and options.in_shardings is None
                 and options.out_shardings is None
                 and not options.donate_argnums)

@@ -75,6 +75,7 @@ class Request:
     pos: int = 0                # next cache write position
     t_submit: float = 0.0
     t_admit: Optional[float] = None
+    t_first: Optional[float] = None   # first token emitted (TTFT anchor)
     t_done: Optional[float] = None
     # sampling (paged mode): temperature 0 = greedy, top_k 0 = full vocab
     temperature: float = 0.0
@@ -84,6 +85,15 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new
+
+
+def _percentile(samples: Sequence[float], q: float) -> float:
+    """``np.percentile`` that treats an empty sample list as 0.0 (a report
+    with no latency samples — e.g. every request finished at prefill —
+    must still serialize, and 0 reads as "no data" in every consumer)."""
+    if not len(samples):
+        return 0.0
+    return float(np.percentile(np.asarray(samples, np.float64), q))
 
 
 def _host_uniform(key: int, pos: int) -> float:
@@ -338,9 +348,17 @@ class PagedKVPool:
         requests would flatter it)."""
         return self.pages_in_use + self._outstanding
 
-    def can_admit(self, total_tokens: int) -> bool:
-        return bool(self._free_slots) and \
-            len(self._free_pages) - self._outstanding >= \
+    def can_admit(self, total_tokens: int, *, held_slots: int = 0,
+                  held_pages: int = 0) -> bool:
+        """Would a ``total_tokens``-long request be admitted right now?
+
+        ``held_slots``/``held_pages`` discount capacity already spoken
+        for by requests that are queued but not yet allocated (the
+        engine's internal queue, the server's admission probe) — without
+        them a front door would over-admit into capacity the queue ahead
+        of it is about to consume."""
+        return len(self._free_slots) - held_slots >= 1 and \
+            len(self._free_pages) - self._outstanding - held_pages >= \
             self.pages_for(total_tokens)
 
     def alloc(self, total_tokens: int) -> int:
@@ -473,6 +491,11 @@ class EngineReport:
     prefill_seconds: float
     late_admissions: int
     pool: Optional[object]   # PoolStats (continuous) | PagedPoolStats (paged)
+    # time-to-first-token: submit -> first emitted token, per request —
+    # the serving SLO headline (distinct from per-token p50/p95, which
+    # sample steady-state decode dispatches)
+    ttft_p50_ms: float = 0.0
+    ttft_p95_ms: float = 0.0
     # KV bytes the pool had reserved per token actually cached, averaged
     # over decode dispatches (continuous + paged modes) — the memory
     # metric the paged pool exists to shrink
@@ -493,7 +516,8 @@ class ServeEngine:
                  options: Optional[CompileOptions] = None,
                  page_size: Optional[int] = None,
                  chunk_steps: Optional[int] = None,
-                 pages: Optional[int] = None):
+                 pages: Optional[int] = None,
+                 device: Optional[object] = None):
         """Every graph the engine compiles (serve/decode step, per-length
         prefills, fused donated chunks) goes through ``options`` — so
         ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
@@ -512,7 +536,11 @@ class ServeEngine:
         self.max_len = int(max_len)
         self.mode = mode
         self.seed = seed
-        self.backend = Backend.create(backend)
+        # `device` pins every compiled graph (and so the KV pool buffers
+        # the outputs allocate) to one accelerator — how a multi-engine
+        # host runs one engine per device (ROADMAP §5)
+        self.backend = Backend.create(
+            backend, **({"device": device} if device is not None else {}))
         self.base_options = options or CompileOptions()
 
         if mode == "paged":
@@ -631,28 +659,29 @@ class ServeEngine:
         self._prefill: Dict[Tuple[int, int], Tuple] = {}
 
     # -- request intake ------------------------------------------------------
-    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
-               top_k: int = 0, key: int = 0) -> int:
-        """Queue a request.  ``temperature``/``top_k``/``key`` are per-row
-        sampling inputs of the paged graph (temperature 0 = greedy, the
-        default and the cross-mode parity baseline; top_k 0 = full
-        vocabulary; ``key`` seeds the request's PRNG stream — same key,
-        same tokens)."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+    def check_request(self, prompt_len: int, max_new: int, *,
+                      temperature: float = 0.0, top_k: int = 0,
+                      key: int = 0) -> None:
+        """Validate request parameters without queueing anything; raises
+        ``ValueError`` on the first violation.  Factored out of
+        :meth:`submit` so a front door can turn a bad request body into
+        a 400 before it ever crosses onto the engine thread."""
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        if len(prompt) + max_new > self.max_len:
+        if prompt_len < 1:
+            raise ValueError("prompt must hold at least one token")
+        if prompt_len + max_new > self.max_len:
             raise ValueError(
-                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+                f"prompt({prompt_len}) + max_new({max_new}) exceeds "
                 f"max_len={self.max_len}")
         if self.mode == "paged":
             # a request that outsizes the whole (possibly user-shrunk)
             # page pool would wait in the queue forever — reject now
             usable = self.pool.n_pages - 1   # page 0 is the trash page
-            need = self.pool.pages_for(len(prompt) + max_new)
+            need = self.pool.pages_for(prompt_len + max_new)
             if need > usable:
                 raise ValueError(
-                    f"request needs {need} pages ({len(prompt)} prompt + "
+                    f"request needs {need} pages ({prompt_len} prompt + "
                     f"{max_new} new tokens at page_size "
                     f"{self.pool.page_size}) but the pool only has "
                     f"{usable} usable pages — it could never be admitted")
@@ -669,6 +698,57 @@ class ServeEngine:
             raise ValueError(
                 f"stochastic sampling (temperature/top_k/key) needs "
                 f"mode='paged'; mode {self.mode!r} decodes greedily")
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests submitted but not yet admitted to a slot."""
+        return len(self._queue)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Would a new request fit *after* everything already queued?
+
+        Queue-aware: the engine's internal queue holds capacity that the
+        scheduler will consume at the next step boundary, so the free
+        slots/pages it is about to claim are discounted — this is the
+        admission predicate a bounded front-door wait queue maps onto."""
+        if self.mode not in ("continuous", "paged"):
+            raise RuntimeError(
+                "can_admit() is only available in continuous/paged modes")
+        queued = [self._requests[r] for r in self._queue]
+        if self.mode == "continuous":
+            return self.pool.slots - self.pool.active - len(queued) >= 1
+        held = sum(self.pool.pages_for(len(r.prompt) + r.max_new)
+                   for r in queued)
+        return self.pool.can_admit(prompt_len + max_new,
+                                   held_slots=len(queued), held_pages=held)
+
+    def live_stats(self) -> Dict[str, object]:
+        """Instantaneous gauges for a metrics endpoint (cheap, no
+        device sync): queue depth, slot occupancy, and — in paged mode —
+        physical pages in use."""
+        d: Dict[str, object] = {
+            "mode": self.mode,
+            "queue_depth": self.queue_depth,
+            "slots": self.slots,
+            "active_slots": self.pool.active if self.pool is not None
+            else 0,
+            "steps": self._steps,
+        }
+        if self.mode == "paged":
+            d["pages_in_use"] = self.pool.pages_in_use
+            d["pages"] = self.pool.n_pages - 1
+        return d
+
+    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+               top_k: int = 0, key: int = 0) -> int:
+        """Queue a request.  ``temperature``/``top_k``/``key`` are per-row
+        sampling inputs of the paged graph (temperature 0 = greedy, the
+        default and the cross-mode parity baseline; top_k 0 = full
+        vocabulary; ``key`` seeds the request's PRNG stream — same key,
+        same tokens)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.check_request(len(prompt), max_new, temperature=temperature,
+                           top_k=top_k, key=key)
         rid = self._next_rid
         self._next_rid += 1
         self._requests[rid] = Request(rid, prompt, int(max_new),
@@ -739,7 +819,9 @@ class ServeEngine:
         req.slot = slot
         req.pos = P
         req.tokens = [first]
-        req.t_admit = time.perf_counter()
+        # the first token exists the moment prefill returns: admission
+        # and first-token are the same instant on this scheduler
+        req.t_admit = req.t_first = time.perf_counter()
         self._slot_req[slot] = req.rid
         self._tok[slot, 0] = first
         self._pos[slot] = P
@@ -934,9 +1016,11 @@ class ServeEngine:
             outs = cf.raw(*pin, *pvals)
         logits = np.asarray(outs[0]).reshape(B, -1)
         tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
+        t_first = time.perf_counter()
         for i, r in enumerate(reqs):
             r.pos = P
             r.tokens = [int(tok[i, 0])]
+            r.t_admit = r.t_first = t_first
         # decode caches: zero-filled, prefill prefix copied in by *name*
         # (ModelGraphs.aux["cache_names"] — prefill output i is the decode
         # input named cache_names[i]; no shape-matching heuristics)
@@ -1050,15 +1134,19 @@ class ServeEngine:
                    for rid, r in self._requests.items()}
         gen = sum(len(v) for v in results.values())
         decode_secs = sum(self.step_seconds)
+        ttft = [(r.t_first - r.t_submit) * 1e3
+                for r in self._requests.values() if r.t_first is not None]
         return EngineReport(
             mode=self.mode, results=results, wall_seconds=wall,
             generated_tokens=gen, tok_s=gen / max(wall, 1e-9),
             decode_tok_s=self._decode_tokens / max(decode_secs, 1e-9),
-            p50_ms=float(np.percentile(self.lat_ms, 50)) if self.lat_ms else 0.0,
-            p95_ms=float(np.percentile(self.lat_ms, 95)) if self.lat_ms else 0.0,
+            p50_ms=_percentile(self.lat_ms, 50),
+            p95_ms=_percentile(self.lat_ms, 95),
             steps=self._steps, prefill_seconds=self.prefill_seconds,
             late_admissions=self.late_admissions,
             pool=self.pool.stats() if self.pool is not None else None,
+            ttft_p50_ms=_percentile(ttft, 50),
+            ttft_p95_ms=_percentile(ttft, 95),
             kv_bytes_per_active_token=(
                 self._kv_byte_steps / self._kv_token_steps
                 if self._kv_token_steps else None))

@@ -18,6 +18,14 @@ every request fully generated) — used by the CI serving smoke step.
 ``--report-json FILE`` dumps the EngineReport (results, pool stats,
 kv_bytes_per_active_token) for the CI serving matrix's parity check
 (``scripts/check_serving_matrix.py``).
+
+``--serve-http`` skips the synthetic workload and instead runs the
+asyncio front door (:mod:`repro.launch.server`) over the engine —
+streaming ``POST /v1/generate``, ``GET /v1/metrics``, ``GET /healthz`` —
+until SIGTERM/SIGINT, then drains gracefully and (with
+``--report-json``) writes the served-request report for the CI server
+leg.  ``--device`` pins the engine's compiled graphs and KV pool to one
+accelerator (``Backend.create("jax", device=...)``).
 """
 from __future__ import annotations
 
@@ -43,8 +51,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "provisioning headroom beyond the workload is "
                          "where the paged pool's savings show)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mode", default="continuous",
-                    choices=("lockstep", "donated", "continuous", "paged"))
+    ap.add_argument("--mode", default=None,
+                    choices=("lockstep", "donated", "continuous", "paged"),
+                    help="engine mode (default: continuous; paged when "
+                         "--serve-http)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="paged mode: token rows per KV page (default 8)")
     ap.add_argument("--chunk-steps", type=int, default=None,
@@ -72,6 +82,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--min-disk-hits", type=int, default=None, metavar="N",
                     help="assert >= N persistent-cache disk hits (CI: the "
                          "second run of an unchanged graph must warm-start)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="run the asyncio HTTP front door instead of a "
+                         "synthetic workload (drains on SIGTERM/SIGINT)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8777,
+                    help="--serve-http listen port (0 = ephemeral)")
+    ap.add_argument("--max-wait-queue", type=int, default=8,
+                    help="--serve-http: accepted-but-unadmitted request "
+                         "bound; beyond it new requests get 429")
+    ap.add_argument("--device", default=None,
+                    help="pin the engine to one accelerator, e.g. 'cpu:0' "
+                         "(jax device placement)")
     args = ap.parse_args(argv)
 
     from ..backend import CompileOptions
@@ -87,7 +109,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     if max_len < P + G:
         raise SystemExit(f"--max-len {max_len} < prompt-len + gen ({P + G})")
 
-    mode = args.mode
+    mode = args.mode or ("paged" if args.serve_http else "continuous")
+    if args.serve_http and mode not in ("continuous", "paged"):
+        raise SystemExit(
+            f"--serve-http needs a step()-capable engine "
+            f"(--mode continuous|paged), got {mode!r}")
     if cfg.family != "dense" and mode != "lockstep":
         if mode == "paged":
             # an explicit paged request must not silently fall back to a
@@ -115,7 +141,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     engine = ServeEngine(cfg, slots=args.batch, max_len=max_len,
                          mode=mode, seed=args.seed, options=options,
                          page_size=args.page_size,
-                         chunk_steps=args.chunk_steps, pages=args.pages)
+                         chunk_steps=args.chunk_steps, pages=args.pages,
+                         device=args.device)
+    if args.serve_http:
+        return _serve_http(engine, args, cfg, mode, max_len)
     sampling = {}
     if mode == "paged" and (args.temperature or args.top_k):
         sampling = dict(temperature=args.temperature, top_k=args.top_k)
@@ -129,6 +158,7 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"(prompt {P}, {args.batch} slots) in {rep.wall_seconds:.2f}s "
           f"({rep.tok_s:.1f} tok/s e2e, {rep.decode_tok_s:.1f} tok/s decode, "
           f"p50 {rep.p50_ms:.2f}ms p95 {rep.p95_ms:.2f}ms/token, "
+          f"ttft p50 {rep.ttft_p50_ms:.1f}ms p95 {rep.ttft_p95_ms:.1f}ms, "
           f"{rep.steps} steps, late admissions {rep.late_admissions})")
     if rep.pool is not None:
         p = rep.pool
@@ -205,6 +235,48 @@ def main(argv: Optional[List[str]] = None) -> int:
                 f"records were not reused")
         print(f"[disk-cache] ok ({st.disk_hits} hits, "
               f"{st.autotune_sweeps} sweeps)")
+    return 0
+
+
+def _serve_http(engine, args, cfg, mode, max_len) -> int:
+    """The --serve-http path: front door up, drain on SIGTERM/SIGINT,
+    then print/emit the served-request report."""
+    from .server import ServeHTTPServer
+
+    srv = ServeHTTPServer(engine, host=args.host, port=args.port,
+                          max_wait_queue=args.max_wait_queue)
+    srv.serve_forever(on_ready=lambda: print(
+        f"[serve-http:{mode}] {cfg.name} listening on {srv.base_url} "
+        f"(slots={args.batch} max_len={max_len} "
+        f"wait_queue={args.max_wait_queue})", flush=True))
+
+    snap = srv.stats.snapshot()
+    print(f"[serve-http] drained: {snap['requests_completed']} completed / "
+          f"{snap['requests_accepted']} accepted "
+          f"(429s {snap['rejected_429']}, 503s {snap['rejected_503']}), "
+          f"{snap['tokens_streamed']} tokens streamed, "
+          f"ttft p50 {snap['ttft_p50_ms']:.1f}ms "
+          f"p95 {snap['ttft_p95_ms']:.1f}ms, "
+          f"tok p50 {snap['tok_p50_ms']:.1f}ms "
+          f"p95 {snap['tok_p95_ms']:.1f}ms, "
+          f"sustained {snap['sustained_tok_s']:.1f} tok/s, "
+          f"drain_ok={srv.drain_ok}")
+    if args.report_json:
+        doc = srv.report_doc()
+        doc["workload"] = {"requests": args.requests or args.batch,
+                           "prompt_len": args.prompt_len, "gen": args.gen,
+                           "slots": args.batch, "max_len": max_len,
+                           "seed": args.seed,
+                           "temperature": args.temperature,
+                           "top_k": args.top_k}
+        with open(args.report_json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"[report] wrote {args.report_json}")
+    if not srv.drain_ok:
+        print("[serve-http] ERROR: drain left engine state behind "
+              "(see report)", flush=True)
+        return 1
     return 0
 
 

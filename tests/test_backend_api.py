@@ -246,6 +246,53 @@ def test_backends_agree_through_new_api():
     np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)
 
 
+def test_device_pinned_backend_resolves_and_matches():
+    """Backend.create("jax", device=...) pins to a real jax.Device; every
+    spelling (string, index, Device) resolves to the same device, the
+    normalized opt keys the memo, and pinned output equals unpinned."""
+    import jax
+
+    be = Backend.create("jax", fresh=True, device="cpu:0")
+    assert be.device is jax.devices()[0]
+    assert be.backend_opts == {"device": "cpu:0"}  # normalized, stable key
+    assert Backend.create("jax", fresh=True, device="cpu").device \
+        is be.device
+    assert Backend.create("jax", fresh=True, device=0).device is be.device
+    assert Backend.create("jax", fresh=True,
+                          device=jax.devices()[0]).device is be.device
+    xa, wa = _args()
+    pinned = be.compile(_graph(), CompileOptions(level="O1"))(xa, wa)[0]
+    plain = Backend.create("jax", fresh=True).compile(
+        _graph(), CompileOptions(level="O1"))(xa, wa)[0]
+    np.testing.assert_allclose(pinned, plain, atol=1e-6)
+    # pinned and unpinned are distinct memo entries
+    assert Backend.create("jax", device="cpu:0") \
+        is Backend.create("jax", device="cpu:0")
+    assert Backend.create("jax", device="cpu:0") \
+        is not Backend.create("jax")
+
+
+def test_device_errors_name_the_available_devices():
+    with pytest.raises(ValueError, match="available"):
+        Backend.create("jax", fresh=True, device="tpu:7")
+    with pytest.raises(ValueError, match="out of range"):
+        Backend.create("jax", fresh=True, device=99)
+    with pytest.raises(ValueError, match="malformed"):
+        Backend.create("jax", fresh=True, device="cpu:zero")
+    with pytest.raises(TypeError, match="device"):
+        Backend.create("jax", fresh=True, device=1.5)
+    with pytest.raises(TypeError, match="unknown jax backend opts"):
+        Backend.create("jax", fresh=True, gpu=True)
+
+
+def test_device_pinned_backend_disables_aot_export():
+    """An AOT blob drops placement, so a pinned backend must never
+    serialize executables (it would silently run on the default device)."""
+    assert Backend.create("jax", fresh=True)._exportable(CompileOptions())
+    assert not Backend.create(
+        "jax", fresh=True, device="cpu")._exportable(CompileOptions())
+
+
 def test_legacy_shim_warns_and_forwards():
     from repro.transformers import get_transformer
     fn = _graph()

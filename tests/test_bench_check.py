@@ -98,14 +98,25 @@ def _paged_pool(**over):
     return pool
 
 
+def _server_report(results, **over):
+    doc = _report("server", results, pool=_paged_pool(), kv=930.0)
+    doc.update({"engine_mode": "paged", "drain_ok": True,
+                "server": {"ttft_p95_ms": 12.0,
+                           "requests_completed": len(results)}})
+    doc.update(over)
+    return doc
+
+
 def test_serving_matrix_gate(tmp_path):
     """scripts/check_serving_matrix.py: greedy parity + page-leak bounds
-    over the EngineReport artifacts, with readable failures."""
+    + HTTP-front-door drain over the report artifacts, with readable
+    failures."""
     res = {"0": [1, 2, 3], "1": [4, 5, 6], "2": [7, 8, 9]}
     good = {
         "cont": _report("continuous", res, kv=1365.0),
         "don": _report("donated", res),
         "paged": _report("paged", res, pool=_paged_pool(), kv=930.0),
+        "server": _server_report(res),
     }
     paths = {}
     for name, doc in good.items():
@@ -144,6 +155,35 @@ def test_serving_matrix_gate(tmp_path):
     (tmp_path / "paged.json").write_text(json.dumps(good["paged"]))
     r = _matrix(paths["don"], paths["paged"])
     assert r.returncode == 1 and "continuous leg" in r.stderr
+
+    # no server leg: the matrix must exercise the HTTP front door
+    r = _matrix(paths["cont"], paths["don"], paths["paged"])
+    assert r.returncode == 1 and "mode=server" in r.stderr
+
+    # the server leg joins the greedy parity loop (tag-keyed results)
+    skew = _server_report(dict(res, **{"2": [7, 8, 0]}))
+    (tmp_path / "server.json").write_text(json.dumps(skew))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "server: req 2 diverged" in r.stderr
+
+    # a dirty drain must fail even when every token agrees
+    (tmp_path / "server.json").write_text(json.dumps(
+        _server_report(res, drain_ok=False)))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "drain_ok" in r.stderr
+    leaked = _server_report(res)
+    leaked["pool"] = _paged_pool(pages_in_use=3)
+    (tmp_path / "server.json").write_text(json.dumps(leaked))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "pages still in use" in r.stderr
+
+    # and the SLO evidence must exist: a server leg without a TTFT
+    # sample never actually streamed
+    (tmp_path / "server.json").write_text(json.dumps(
+        _server_report(res, server={"ttft_p95_ms": 0.0,
+                                    "requests_completed": 3})))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "ttft_p95_ms" in r.stderr
 
 
 def test_autotune_dir_validation(tmp_path):

@@ -133,3 +133,63 @@ def test_max_new_one_finishes_at_prefill():
     rep = eng.run()
     assert len(rep.results[rid]) == 1
     assert rep.pool.allocs == 1 and rep.pool.frees == 1
+
+
+def test_percentile_edge_cases():
+    from repro.launch.engine import _percentile
+    assert _percentile([], 50) == 0.0          # empty: no samples, not NaN
+    assert _percentile([], 95) == 0.0
+    assert _percentile([7.0], 50) == 7.0       # one sample is every quantile
+    assert _percentile([7.0], 95) == 7.0
+    assert _percentile([1.0, 2.0, 3.0], 50) == 2.0
+
+
+def test_report_separates_ttft_from_per_token_latency():
+    """TTFT anchors at prefill return (one sample per request); per-token
+    latency is per decode step — the report must carry both families."""
+    rng = np.random.default_rng(4)
+    for mode in ("continuous", "lockstep"):
+        eng = ServeEngine(CFG, slots=2, max_len=10, mode=mode, seed=0)
+        for _ in range(2):
+            eng.submit(_prompt(rng, 4), 6)
+        rep = eng.run()
+        assert rep.ttft_p50_ms > 0, mode
+        assert rep.ttft_p95_ms >= rep.ttft_p50_ms, mode
+        assert rep.p95_ms >= rep.p50_ms > 0, mode
+    # a request that finishes entirely at prefill still has a TTFT
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="continuous", seed=0)
+    eng.submit(_prompt(rng, 4), 1)
+    assert eng.run().ttft_p50_ms > 0
+
+
+def test_can_admit_queue_aware_edge_cases():
+    """can_admit at exact capacity: the engine's internal queue holds
+    capacity a front door must not hand out twice."""
+    with pytest.raises(RuntimeError):
+        ServeEngine(CFG, slots=1, max_len=8, mode="lockstep",
+                    seed=0).can_admit(4, 4)
+
+    # continuous: the queued request owns the only slot
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="continuous", seed=0)
+    assert eng.can_admit(4, 4)
+    eng.submit(np.zeros(4, np.int32), 4)
+    assert eng.queue_depth == 1
+    assert not eng.can_admit(4, 4)
+
+    # paged: default pool is provisioned for exactly slots full-length
+    # requests — the boundary where the queue consumes the last page
+    eng = ServeEngine(CFG, slots=2, max_len=8, mode="paged", seed=0,
+                      page_size=4)
+    pool = eng.pool
+    free = pool.n_pages - 1            # physical page 0 is the trash page
+    need = pool.pages_for(8)
+    assert pool.can_admit(8)
+    assert pool.can_admit(8, held_pages=free - need)       # exactly enough
+    assert not pool.can_admit(8, held_pages=free - need + 1)
+    assert pool.can_admit(8, held_slots=pool.slots - 1)
+    assert not pool.can_admit(8, held_slots=pool.slots)
+    assert eng.can_admit(4, 4)
+    eng.submit(np.zeros(4, np.int32), 4)
+    assert eng.can_admit(4, 4)          # second slot + pages still free
+    eng.submit(np.zeros(4, np.int32), 4)
+    assert not eng.can_admit(4, 4)      # queue holds every slot and page

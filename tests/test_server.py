@@ -1,0 +1,150 @@
+"""The HTTP front door (repro.launch.server): streamed tokens must be
+token-for-token identical to the direct engine, admission must map onto
+the queue-aware can_admit with deterministic 429/503 backpressure, and a
+drain must finish in-flight streams and return every KV page."""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import loadgen
+from repro.launch.engine import ServeEngine
+from repro.launch.server import ServeHTTPServer, running_server
+
+CFG = get_config("deepseek-7b").reduced()
+
+
+def _engine(slots=2, max_len=16, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("chunk_steps", 3)
+    return ServeEngine(CFG, slots=slots, max_len=max_len, mode="paged",
+                       seed=0, **kw)
+
+
+def _poll(cond, what, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"{what} (within {timeout}s)")
+
+
+def test_server_streams_match_direct_engine():
+    """3 concurrent clients on 2 slots: every streamed token equals the
+    direct engine's decode of the same prompt, and the drain leaves the
+    page pool empty."""
+    P, G, n = 4, 6, 3
+    prompts = loadgen.make_prompts(n, P, CFG.vocab, seed=0)
+    ref_eng = _engine()
+    rids = [ref_eng.submit(p, G) for p in prompts]
+    ref = {str(i): list(ref_eng.run().results[r]) for i, r in enumerate(rids)}
+
+    with running_server(_engine(), max_wait_queue=n) as srv:
+        res = loadgen.run_load(srv.base_url, prompts, G)
+        assert res.statuses == {200: n} and not res.errors
+        metrics = loadgen.fetch_json(srv.base_url, "/v1/metrics")
+        assert metrics["engine"]["mode"] == "paged"
+        assert metrics["server"]["requests_completed"] == n
+        assert metrics["server"]["ttft_p95_ms"] > 0
+        health = loadgen.fetch_json(srv.base_url, "/healthz")
+        assert health == {"ok": True, "draining": False}
+    assert res.results == ref
+    assert srv.drain_ok is True
+    assert srv.engine.pool.pages_in_use == 0
+    doc = srv.report_doc()
+    assert doc["mode"] == "server" and doc["engine_mode"] == "paged"
+    assert doc["results"] == ref
+    assert doc["server"]["tokens_streamed"] == n * G
+
+
+def test_backpressure_429_then_503_through_drain():
+    """1 slot, wait queue 0: B while A streams -> 429; C after drain
+    begins -> 503; A still finishes every token through the drain."""
+    P, G = 4, 48
+    srv = ServeHTTPServer(_engine(slots=1, max_len=P + G, chunk_steps=1),
+                          max_wait_queue=0)
+    srv.start_in_thread()
+    url = srv.base_url
+    prompt = [int(t) for t in loadgen.make_prompts(1, P, CFG.vocab)[0]]
+
+    a_box = {}
+
+    def client_a():
+        a_box["res"] = asyncio.run(loadgen.stream_generate(
+            url, {"prompt": prompt, "max_new": G, "tag": "A"}, timeout=300))
+
+    a = threading.Thread(target=client_a, daemon=True)
+    a.start()
+    _poll(lambda: loadgen.fetch_json(url, "/v1/metrics")
+          ["engine"]["active_slots"] >= 1, "A never took the slot")
+
+    rb = asyncio.run(loadgen.stream_generate(
+        url, {"prompt": prompt, "max_new": G}, timeout=30))
+    assert rb.status == 429, (rb.status, rb.error)
+
+    stopper = threading.Thread(target=srv.shutdown, daemon=True)
+    stopper.start()
+    _poll(lambda: loadgen.fetch_json(url, "/healthz")["draining"],
+          "drain never started")
+    rc = asyncio.run(loadgen.stream_generate(
+        url, {"prompt": prompt, "max_new": G}, timeout=30))
+    assert rc.status == 503, (rc.status, rc.error)
+
+    a.join(300)
+    assert not a.is_alive()
+    ra = a_box["res"]
+    assert ra.status == 200 and not ra.error and len(ra.tokens) == G
+    stopper.join(120)
+    assert not stopper.is_alive()
+    assert srv.drain_ok is True
+    snap = srv.stats.snapshot()
+    assert snap["rejected_429"] == 1 and snap["rejected_503"] == 1
+
+
+def test_text_prompt_and_request_validation():
+    """'text' folds bytes into the vocab; malformed bodies are 400 with
+    the reason, unknown routes 404, wrong methods 405."""
+    with running_server(_engine()) as srv:
+        url = srv.base_url
+        text = "hi"
+        r = asyncio.run(loadgen.stream_generate(
+            url, {"text": text, "max_new": 3}, timeout=120))
+        assert r.status == 200 and len(r.tokens) == 3 and not r.error
+        # same ids submitted directly must decode identically
+        ids = np.asarray([b % CFG.vocab for b in text.encode()], np.int32)
+        eng = _engine()
+        rid = eng.submit(ids, 3)
+        assert r.tokens == list(eng.run().results[rid])
+
+        for bad, why in [
+            ({}, "prompt"),                                  # no prompt
+            ({"prompt": []}, "prompt"),                      # empty
+            ({"prompt": [0], "max_new": 0}, "max_new"),      # bad max_new
+            ({"prompt": [CFG.vocab]}, "prompt ids"),         # out of vocab
+            ({"prompt": [0], "max_new": 99}, "max_len"),     # too long
+            ({"prompt": [0], "tag": [1]}, "tag"),            # bad tag type
+            ({"prompt": [0], "max_new": 2, "temperature": -1},
+             "temperature"),
+        ]:
+            status, doc = asyncio.run(loadgen.http_json(
+                url, "POST", "/v1/generate", bad))
+            assert status == 400, (bad, status, doc)
+            assert why in doc["error"], (bad, doc)
+        status, doc = asyncio.run(loadgen.http_json(url, "GET", "/nope"))
+        assert status == 404
+        status, doc = asyncio.run(loadgen.http_json(
+            url, "DELETE", "/v1/generate"))
+        assert status == 405
+    assert srv.drain_ok is True
+
+
+def test_server_requires_step_capable_engine():
+    eng = ServeEngine(CFG, slots=1, max_len=8, mode="donated", seed=0)
+    with pytest.raises(ValueError, match="step\\(\\)-capable"):
+        ServeHTTPServer(eng)
+    with pytest.raises(ValueError, match="max_wait_queue"):
+        ServeHTTPServer(_engine(), max_wait_queue=-1)

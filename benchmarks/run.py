@@ -354,6 +354,122 @@ def bench_autotune():
         shutil.rmtree(cache_dir, ignore_errors=True)
 
 
+def bench_kernels():
+    """E14: fused compound kernels (SwiGLU / norm+matmul) vs their
+    unfused decompositions, and the matmul tile-shape sweep.
+
+    Each compound graph is built in *unfused* form — the way model
+    builders emit it — and compiled at O2 with ``autotune=True``: the
+    sweep times the fused request (candidate 0) against per-compound
+    fusion flips and the all-unfused baseline.  The selected config can
+    never lose to the unfused baseline (both are candidates and the
+    winner is the min), which is the ratio gate
+    ``bench_to_json --check`` enforces."""
+    import glob
+    import json
+    import shutil
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.backend import Backend, CompileOptions
+    from repro.core import ops
+    from repro.core.function import Function
+    from repro.kernels.matmul import matmul as raw_matmul
+    from repro.kernels.ref import matmul_ref
+
+    def load_record(cache_dir):
+        [p] = glob.glob(os.path.join(cache_dir, "autotune", "*.tune.json"))
+        with open(p) as fh:
+            return json.load(fh)
+
+    def tiles(c):
+        return (c["use_pallas"], c["mm_bm"], c["mm_bn"], c["mm_bk"])
+
+    def fused_vs_unfused(name, fn):
+        cache_dir = tempfile.mkdtemp(prefix=f"repro-kbench-{name}-")
+        try:
+            opts = CompileOptions(level="O2", use_pallas=True,
+                                  interpret_pallas=True, autotune=True,
+                                  cache_dir=cache_dir)
+            be = Backend.create("jax", fresh=True)
+            be.compile(fn, opts)
+            rec = load_record(cache_dir)
+            cands = rec["candidates"]
+            fused = cands[0]  # candidate 0: the request, compounds on
+            unfused = next(
+                c for c in cands
+                if not (c["fuse_swiglu"] or c["fuse_norm_matmul"]
+                        or c["fuse_rotary_qkv"]) and tiles(c) == tiles(fused))
+            selected_ms = min(c["ms"] for c in cands)
+            emit("E14_kernels", f"{name}_unfused_ms", unfused["ms"], "ms")
+            emit("E14_kernels", f"{name}_fused_ms", fused["ms"], "ms")
+            emit("E14_kernels", f"{name}_selected_ms", selected_ms, "ms")
+            emit("E14_kernels", f"{name}_selected_over_unfused",
+                 selected_ms / unfused["ms"], "x")
+        finally:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # unfused swiglu MLP block, the shape components.apply_mlp emits
+    M, D, F, Do = 128, 256, 512, 256
+    x = ops.parameter((M, D), "f32", "x")
+    wg = ops.parameter((D, F), "f32", "wg")
+    wu = ops.parameter((D, F), "f32", "wu")
+    wd = ops.parameter((F, Do), "f32", "wd")
+    g = ops.silu(ops.matmul(x.out(), wg.out()))
+    u = ops.matmul(x.out(), wu.out())
+    fused_vs_unfused("swiglu", Function(
+        [x, wg, wu, wd], [ops.matmul(ops.multiply(g, u), wd.out())]))
+
+    # unfused rmsnorm feeding a matmul (pre-attention / unembed shape)
+    x2 = ops.parameter((M, D), "f32", "x2")
+    gn = ops.parameter((D,), "f32", "gn")
+    w2 = ops.parameter((D, Do), "f32", "w2")
+    fused_vs_unfused("norm_matmul", Function(
+        [x2, gn, w2],
+        [ops.matmul(ops.rms_norm(x2.out(), gn.out()), w2.out())]))
+
+    # matmul tile-shape sweep + sweep-free re-resolution from the record
+    a = ops.parameter((256, 256), "f32", "a")
+    b = ops.parameter((256, 256), "f32", "b")
+    mm = Function([a, b], [ops.matmul(a.out(), b.out())])
+    cache_dir = tempfile.mkdtemp(prefix="repro-kbench-matmul-")
+    try:
+        opts = CompileOptions(level="O2", use_pallas=True,
+                              interpret_pallas=True, autotune=True,
+                              cache_dir=cache_dir)
+        be = Backend.create("jax", fresh=True)
+        be.compile(mm, opts)
+        rec = load_record(cache_dir)
+        cands = rec["candidates"]
+        default_ms = cands[0]["ms"]
+        pallas_tiles = [c for c in cands if c["use_pallas"]]
+        best_ms = min(c["ms"] for c in pallas_tiles)
+        emit("E14_kernels", "matmul_tile_candidates", len(pallas_tiles), "")
+        emit("E14_kernels", "matmul_default_tile_ms", default_ms, "ms")
+        emit("E14_kernels", "matmul_best_tile_ms", best_ms, "ms")
+        emit("E14_kernels", "matmul_best_over_default",
+             best_ms / default_ms, "x")
+        be2 = Backend.create("jax", fresh=True)
+        be2.compile(mm, opts)
+        st = be2.cache_stats()
+        assert st.autotune_sweeps == 0, "tile record was not reused"
+        emit("E14_kernels", "matmul_reresolve_sweep_free",
+             int(st.autotune_sweeps == 0 and st.autotune_hits == 1), "bool")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # satellite: odd shapes lower to the XLA reference instead of
+    # asserting — an autotune sweep must never crash on them
+    rng = np.random.default_rng(7)
+    am = jnp.asarray(rng.normal(size=(7, 100)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(100, 33)), jnp.float32)
+    got = raw_matmul(am, bm, bm=8, bn=128, bk=128, interpret=True)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(matmul_ref(am, bm)),
+                          atol=1e-4))
+    emit("E14_kernels", "matmul_fallback_ok", int(ok), "bool")
+
+
 def bench_serving():
     """E10: the serving hot loop — lockstep host-round-trip baseline vs
     donated device-resident decode vs continuous batching (ServeEngine).
@@ -606,6 +722,7 @@ SECTIONS = {
     "paged": bench_paged,
     "server": bench_server,
     "autotune": bench_autotune,
+    "kernels": bench_kernels,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,
 }

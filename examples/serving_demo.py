@@ -12,11 +12,19 @@ top-k / PRNG key) are per-request graph inputs — greedy requests stay
 token-for-token identical to continuous mode while the pool reserves
 fewer KV bytes per token actually cached.
 
-The final section puts the HTTP front door (``launch/server.py``) over
+The third section puts the HTTP front door (``launch/server.py``) over
 a paged engine and talks to it like a network client would: a streaming
 ``POST /v1/generate`` consumed token by token over SSE, a ``text``
 prompt, and the ``GET /v1/metrics`` SLO snapshot — then drains the
 server and shows the pool came back empty.
+
+The final section shows the fused-kernel layer underneath: compiling a
+serve-family graph at O2 pattern-matches the unfused matmul chains into
+SwiGLU / NormMatmul / RotaryQKV compound ops (per-compound hit counts
+in the PipelineReport), and ``autotune=True`` resolves the Pallas
+matmul tile shapes and per-compound fusion on/off from a recorded
+sweep — candidate 0 is always the request as-given, so the selection
+can never be slower than not tuning.
 
 Run:  PYTHONPATH=src python examples/serving_demo.py
 """
@@ -28,6 +36,38 @@ from repro.configs import get_config
 from repro.launch import loadgen
 from repro.launch.engine import ServeEngine
 from repro.launch.server import running_server
+
+
+def fused_kernel_demo(cfg):
+    import tempfile
+
+    from repro.backend import Backend, CompileOptions
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+
+    g = build_graphs(cfg, ShapeConfig("serve", "serve", 16, 2), 2)
+    be = Backend.create("jax", fresh=True)
+    # what the pattern-matcher finds, before the tuner weighs in
+    cf = be.compile(g.fn, CompileOptions(level="O2", use_pallas=True,
+                                         interpret_pallas=True))
+    hits = dict(cf.report.stats)["fuse-compounds"]
+    print("compounds fused at O2:",
+          {k: v for k, v in hits.items() if v})
+    # the tuner sweeps matmul tiles and per-compound on/off; under the
+    # CPU interpreter it may well keep fusion off — candidate 0 is the
+    # request as-given, so the selection never loses to not tuning
+    with tempfile.TemporaryDirectory() as cache_dir:
+        cf = be.compile(g.fn, CompileOptions(
+            level="O2", use_pallas=True, interpret_pallas=True,
+            autotune=True, cache_dir=cache_dir))
+        print(f"autotuned knobs: mm tiles "
+              f"({cf.options.mm_bm}, {cf.options.mm_bn}, "
+              f"{cf.options.mm_bk}), "
+              f"fuse_swiglu={cf.options.fuse_swiglu} "
+              f"fuse_norm_matmul={cf.options.fuse_norm_matmul}")
+        st = be.cache_stats()
+        print(f"sweeps={st.autotune_sweeps} (a second process would "
+              f"re-resolve from the record with zero)")
 
 
 def main():
@@ -110,6 +150,10 @@ def main():
               f"engine {metrics['engine']}")
     print(f"drained: drain_ok={srv.drain_ok} "
           f"pages_in_use={engine.pool.pages_in_use}")
+
+    # --- fused compound kernels + the autotuned knob resolution ---
+    print("--- fused kernels ---")
+    fused_kernel_demo(cfg)
 
 
 if __name__ == "__main__":

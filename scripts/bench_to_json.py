@@ -12,7 +12,10 @@ be present, the paged section (E12) must carry the
 kv-bytes-per-active-token rows with ``paged_kv_bytes_ratio < 1`` and
 greedy parity == 1, and the server section (E13) must show an
 over-subscribed load run with TTFT/sustained-throughput rows,
-server-vs-engine parity == 1, and a clean drain.  Every failure is a
+server-vs-engine parity == 1, and a clean drain, and the kernels
+section (E14) must show fused-vs-unfused microbenchmarks whose
+autotune-selected ratios are <= 1 plus clean fallback/re-resolve
+invariants.  Every failure is a
 readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
 diff, never a bare traceback), and the exit code is non-zero.
@@ -60,6 +63,21 @@ REQUIRED_SERVER_ROWS = (
     "server_ttft_p50_ms", "server_ttft_p95_ms",
     "server_tok_p95_ms",
     "server_matches_engine", "server_drain_clean",
+)
+# E14: fused compound kernels.  The *_selected_over_unfused ratios are
+# the headline gates — the autotune-selected config must be no slower
+# than the unfused baseline (guaranteed by construction: both are sweep
+# candidates and the winner is the min, so a snapshot violating this was
+# hand-edited) — and the fallback/re-resolve invariants must hold.
+REQUIRED_KERNELS_ROWS = (
+    "swiglu_unfused_ms", "swiglu_fused_ms", "swiglu_selected_ms",
+    "swiglu_selected_over_unfused",
+    "norm_matmul_unfused_ms", "norm_matmul_fused_ms",
+    "norm_matmul_selected_ms", "norm_matmul_selected_over_unfused",
+    "matmul_tile_candidates",
+    "matmul_default_tile_ms", "matmul_best_tile_ms",
+    "matmul_best_over_default",
+    "matmul_reresolve_sweep_free", "matmul_fallback_ok",
 )
 
 
@@ -197,6 +215,21 @@ def check(path: str) -> int:
         if clients is not None and slots is not None and clients <= slots:
             errors.append(f"server section must over-subscribe the engine "
                           f"(clients {clients} <= slots {slots})")
+    if "kernels" in (doc.get("sections") or []):
+        vals = require("kernels", "E14_kernels", REQUIRED_KERNELS_ROWS)
+        for name in ("swiglu_selected_over_unfused",
+                     "norm_matmul_selected_over_unfused",
+                     "matmul_best_over_default"):
+            ratio = vals.get(name)
+            if ratio is not None and ratio > 1.0:
+                errors.append(f"kernels row {name} must be <= 1 (the "
+                              f"autotune-selected config cannot lose to "
+                              f"candidate 0 / the unfused baseline), "
+                              f"got {ratio}")
+        for name in ("matmul_reresolve_sweep_free", "matmul_fallback_ok"):
+            v = vals.get(name)
+            if v is not None and v != 1:
+                errors.append(f"kernels row {name} must be 1, got {v}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -235,7 +268,7 @@ def check_autotune_dir(tune_dir: str) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
-                    default=["serving", "paged", "server"])
+                    default=["serving", "paged", "server", "kernels"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

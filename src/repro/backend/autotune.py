@@ -1,4 +1,4 @@
-"""Attention autotuner: sweep attn_impl/attn_chunk/use_pallas, remember.
+"""Kernel autotuner: sweep attention/matmul/fusion knobs, remember.
 
 TVM-style "record the schedule choice" scaled to this repo's knob space:
 ``Backend.compile(fn, CompileOptions(autotune=True))`` calls
@@ -8,18 +8,30 @@ versions), else by compiling and timing a small candidate grid and
 persisting the winner into the disk cache (``<cache_dir>/autotune/``).
 The second process to compile the same graph performs zero sweep timings.
 
+The grid is *family-gated* so sweeps stay small: attention knobs
+(``attn_impl``/``attn_chunk``/``use_pallas``) are swept only when the
+graph executes an Attention node; matmul tile shapes
+(``mm_bm``/``mm_bn``/``mm_bk``, shared by the matmul / SwiGLU /
+NormMatmul Pallas kernels) only when ``use_pallas`` is requested; and
+per-compound fusion on/off flips (``fuse_swiglu``/``fuse_norm_matmul``/
+``fuse_rotary_qkv``) only when the resolved level is O2 — the only level
+where :class:`FuseCompounds` runs, so flipping them anywhere else would
+time identical executables.
+
 A sweep always times the statically-resolved default as candidate 0, so
 the recorded winner is by construction no slower than the default on the
 machine that tuned it.  Records are keyed on jax+repro versions like
 compile entries: a toolchain bump re-tunes instead of trusting stale
-timings.
+timings.  v1 (attention-only) records remain *valid* for schema checks —
+CI caches carry them across upgrades — but never resolve a v2 request:
+the schema participates in the record key, so v2 re-tunes.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import time
-from typing import Dict, List, Optional
+from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
@@ -27,12 +39,20 @@ from ..core.function import Function
 from . import diskcache
 from .options import CompileOptions, _stable_token, _UNSTABLE
 
-SCHEMA = "repro-autotune-v1"
+SCHEMA_V1 = "repro-autotune-v1"
+SCHEMA = "repro-autotune-v2"
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V1)
 SWEEP_REPS = 3          # timed calls per candidate (after one warmup call)
 CHUNK_CANDIDATES = (256, 1024)
+# matmul-family tile shapes (bm, bn, bk); swept when use_pallas is on
+MM_TILE_CANDIDATES = ((128, 128, 128), (256, 256, 256),
+                      (256, 256, 512), (512, 512, 512))
 
 # the knobs the tuner owns; everything else is identity (part of the key)
-TUNED_FIELDS = ("attn_impl", "attn_chunk", "use_pallas")
+TUNED_FIELDS_V1 = ("attn_impl", "attn_chunk", "use_pallas")
+TUNED_FIELDS = TUNED_FIELDS_V1 + (
+    "mm_bm", "mm_bn", "mm_bk",
+    "fuse_swiglu", "fuse_norm_matmul", "fuse_rotary_qkv")
 
 # record schema, shared with scripts/bench_to_json.py --check validation
 RECORD_REQUIRED_KEYS = ("format", "schema", "backend", "signature",
@@ -70,41 +90,89 @@ def tune_key(backend, fn: Function, options: CompileOptions,
     return hashlib.sha256(repr(doc).encode()).hexdigest()
 
 
+def _collect_ops(fn: Function, acc: set) -> set:
+    for n in fn.nodes():
+        acc.add(n.op)
+        for v in n.attrs.values():
+            if isinstance(v, Function):
+                _collect_ops(v, acc)
+            elif isinstance(v, (tuple, list)):
+                for x in v:
+                    if isinstance(x, Function):
+                        _collect_ops(x, acc)
+    return acc
+
+
 def has_attention(fn: Function) -> bool:
     """True if the graph executes any Attention node — including inside
     nested Functions (Scan bodies carry the per-layer attention)."""
-    for n in fn.nodes():
-        if n.op == "Attention":
-            return True
-        for v in n.attrs.values():
-            if isinstance(v, Function) and has_attention(v):
-                return True
-            if isinstance(v, (tuple, list)) and any(
-                    isinstance(x, Function) and has_attention(x) for x in v):
-                return True
-    return False
+    return "Attention" in _collect_ops(fn, set())
 
 
-def candidate_grid(options: CompileOptions) -> List[Dict]:
+# ops that route through the matmul-family Pallas kernels (tile shapes)
+# and that FuseCompounds can create or leave unfused (fusion flips)
+_MM_FAMILY_OPS = frozenset(
+    {"DotGeneral", "SwiGLU", "NormMatmul", "RotaryQKV"})
+
+
+def tunable_families(fn: Function, options: CompileOptions,
+                     backend=None) -> FrozenSet[str]:
+    """Which knob families a sweep of ``fn`` under ``options`` can
+    actually exercise.  Empty = nothing to tune, skip the sweep."""
+    ops = _collect_ops(fn, set())
+    fams = set()
+    if "Attention" in ops:
+        fams.add("attention")
+    has_mm = bool(ops & _MM_FAMILY_OPS)
+    if has_mm and options.use_pallas:
+        fams.add("matmul")
+    level = options.level or (backend.default_level if backend is not None
+                              else "O1")
+    if has_mm and level == "O2":
+        fams.add("fusion")
+    return frozenset(fams)
+
+
+def candidate_grid(options: CompileOptions,
+                   families: FrozenSet[str] = frozenset({"attention"})
+                   ) -> List[Dict]:
     """The sweep grid.  Candidate 0 is always the request as-given (the
-    static default), so the winner can never regress it."""
+    static default), so the winner can never regress it.  Each family
+    varies its own knobs against the request — no cross products, so the
+    grid stays linear in the number of families."""
     seen = set()
     grid: List[Dict] = []
+    base = {k: getattr(options, k) for k in TUNED_FIELDS}
 
-    def add(impl: str, chunk: int, pallas: bool):
-        key = (impl, chunk, pallas)
+    def add(**over):
+        cand = dict(base)
+        cand.update(over)
+        key = tuple(cand[k] for k in TUNED_FIELDS)
         if key not in seen:
             seen.add(key)
-            grid.append({"attn_impl": impl, "attn_chunk": chunk,
-                         "use_pallas": pallas})
+            grid.append(cand)
 
-    add(options.attn_impl, options.attn_chunk, options.use_pallas)
-    add("naive", options.attn_chunk, options.use_pallas)
-    for c in sorted({options.attn_chunk, *CHUNK_CANDIDATES}):
-        add("chunked", c, options.use_pallas)
-    # one use_pallas flip of the request: times the kernel-vs-XLA choice
-    # without crossing it with every impl
-    add(options.attn_impl, options.attn_chunk, not options.use_pallas)
+    add()  # candidate 0: the request as-given
+    if "attention" in families:
+        add(attn_impl="naive")
+        for c in sorted({options.attn_chunk, *CHUNK_CANDIDATES}):
+            add(attn_impl="chunked", attn_chunk=c)
+        # one use_pallas flip of the request: times the kernel-vs-XLA
+        # choice without crossing it with every impl
+        add(use_pallas=not options.use_pallas)
+    if "matmul" in families:
+        for bm, bn, bk in MM_TILE_CANDIDATES:
+            add(mm_bm=bm, mm_bn=bn, mm_bk=bk)
+        if options.use_pallas and "attention" not in families:
+            add(use_pallas=False)  # XLA escape for matmul-only graphs
+    if "fusion" in families:
+        # flip each compound off one at a time, plus the all-unfused
+        # baseline the E14 microbenchmarks compare against
+        add(fuse_swiglu=not options.fuse_swiglu)
+        add(fuse_norm_matmul=not options.fuse_norm_matmul)
+        add(fuse_rotary_qkv=not options.fuse_rotary_qkv)
+        add(fuse_swiglu=False, fuse_norm_matmul=False,
+            fuse_rotary_qkv=False)
     return grid
 
 
@@ -116,7 +184,8 @@ def resolve(backend, fn: Function,
     returned options always have ``autotune=False`` (they are the
     resolution, not another request)."""
     static = options.replace(autotune=False)
-    if not has_attention(fn):
+    families = tunable_families(fn, options, backend)
+    if not families:
         return static  # nothing to tune
     sig = fn.signature()
     key = tune_key(backend, fn, options, signature=sig)
@@ -130,7 +199,7 @@ def resolve(backend, fn: Function,
     if rec is not None:
         backend.autotune_hits += 1
         return static.replace(**_knobs(rec["winner"]))
-    result = sweep(backend, fn, static, key=key)
+    result = sweep(backend, fn, static, key=key, families=families)
     backend.autotune_sweeps += 1
     _store_record(backend, fn, options, result, mem_key)
     _drop_loser_entries(backend, fn, static, result, signature=sig)
@@ -138,15 +207,19 @@ def resolve(backend, fn: Function,
 
 
 def sweep(backend, fn: Function, static: CompileOptions,
-          key: Optional[str] = None, reps: int = SWEEP_REPS) -> SweepResult:
+          key: Optional[str] = None, reps: int = SWEEP_REPS,
+          families: Optional[FrozenSet[str]] = None) -> SweepResult:
     """Compile + time every candidate; fastest mean wall time wins.
 
     Candidates that fail to compile or run (e.g. a chunk size the shapes
     reject) are skipped — candidate 0 (the static default) always runs, so
     the sweep cannot come back empty."""
+    if families is None:
+        families = tunable_families(fn, static, backend) or \
+            frozenset({"attention"})
     args = [np.zeros(t.shape, t.dtype) for t in fn.in_types]
     timed: List[Dict] = []
-    for cand in candidate_grid(static):
+    for cand in candidate_grid(static, families):
         try:
             cf = backend.compile(fn, static.replace(**cand))
             cf(*args)  # warmup: XLA compile + first dispatch
@@ -190,8 +263,13 @@ def validate_record(rec: Dict) -> List[str]:
     for k in RECORD_REQUIRED_KEYS:
         if k not in rec:
             errors.append(f"missing key {k!r}")
-    if rec.get("schema") not in (None, SCHEMA):
-        errors.append(f"schema {rec['schema']!r} != {SCHEMA!r}")
+    schema = rec.get("schema")
+    if schema not in (None,) + ACCEPTED_SCHEMAS:
+        errors.append(f"schema {rec['schema']!r} not in {ACCEPTED_SCHEMAS!r}")
+    # v1 records (stale CI caches) validate against the v1 knob set; they
+    # never *resolve* a v2 request — the schema is part of the record key
+    fields = TUNED_FIELDS_V1 if schema == SCHEMA_V1 else TUNED_FIELDS
+    cand_required = fields + ("ms",)
     cands = rec.get("candidates")
     if cands is not None:
         if not isinstance(cands, list) or not cands:
@@ -201,7 +279,7 @@ def validate_record(rec: Dict) -> List[str]:
                 if not isinstance(c, dict):
                     errors.append(f"candidates[{i}] must be an object")
                     continue
-                for k in CANDIDATE_REQUIRED_KEYS:
+                for k in cand_required:
                     if k not in c:
                         errors.append(f"candidates[{i}] missing {k!r}")
                 ms = c.get("ms")
@@ -213,7 +291,7 @@ def validate_record(rec: Dict) -> List[str]:
         if not isinstance(win, dict):
             errors.append("winner must be an object")
         else:
-            for k in TUNED_FIELDS:
+            for k in fields:
                 if k not in win:
                     errors.append(f"winner missing {k!r}")
     return errors

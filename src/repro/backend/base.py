@@ -173,7 +173,10 @@ class Backend:
                 disk.hits -= 1
                 disk.misses += 1
         opt_fn, report = run_pipeline(
-            fn, level, compress_grads=options.compress_grads)
+            fn, level, compress_grads=options.compress_grads,
+            fuse={"swiglu": options.fuse_swiglu,
+                  "norm_matmul": options.fuse_norm_matmul,
+                  "rotary_qkv": options.fuse_rotary_qkv})
         call, raw, lower = self._codegen(opt_fn, options)
         compiled = CompiledFunction(
             opt_fn, call, backend=self.name, options=options,

@@ -89,6 +89,8 @@ class JaxBackend(Backend):
                       interpret_pallas=options.interpret_pallas,
                       attn_impl=options.attn_impl,
                       attn_chunk=options.attn_chunk,
+                      mm_bm=options.mm_bm, mm_bn=options.mm_bn,
+                      mm_bk=options.mm_bk,
                       axis_rules=options.axis_rules)
         run = emit_callable(fn, ctx)
         lower = None

@@ -32,6 +32,11 @@ class CompileOptions:
     # pass pipeline
     level: Optional[str] = None          # None | 'O0' | 'O1' | 'O2'
     compress_grads: bool = False         # O2 extra: bf16 AllReduce wires
+    # per-compound fusion gates (O2 only; autotune can flip each one so a
+    # losing fused kernel never ships)
+    fuse_swiglu: bool = True
+    fuse_norm_matmul: bool = True
+    fuse_rotary_qkv: bool = True
 
     # jax emission / partitioning
     mode: str = "jit"                    # 'jit' | 'shardmap' | 'pjit'
@@ -42,6 +47,11 @@ class CompileOptions:
     remat_scan: bool = False             # checkpoint scan bodies
     attn_impl: str = "auto"              # 'auto' | 'naive' | 'chunked'
     attn_chunk: int = 1024
+    # matmul-family Pallas tile shapes (matmul / SwiGLU / NormMatmul);
+    # autotune sweeps these per (backend, shape-signature)
+    mm_bm: int = 256
+    mm_bn: int = 256
+    mm_bk: int = 512
     static_jit: bool = True              # wrap emission in jax.jit
     in_shardings: Any = None
     out_shardings: Any = None
@@ -70,6 +80,15 @@ class CompileOptions:
         if not isinstance(self.attn_chunk, int) or self.attn_chunk <= 0:
             raise OptionsError(
                 f"attn_chunk must be a positive int, got {self.attn_chunk!r}")
+        for name in ("mm_bm", "mm_bn", "mm_bk"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise OptionsError(
+                    f"{name} must be a positive int, got {v!r}")
+        for name in ("fuse_swiglu", "fuse_norm_matmul", "fuse_rotary_qkv"):
+            if not isinstance(getattr(self, name), bool):
+                raise OptionsError(
+                    f"{name} must be a bool, got {getattr(self, name)!r}")
         if self.mode == "pjit" and self.mesh is None:
             raise OptionsError("mode='pjit' requires a mesh")
         if self.mode == "pjit" and not self.static_jit:

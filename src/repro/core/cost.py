@@ -96,6 +96,29 @@ def _node_cost(node: Node, cost: Cost, mult: float, attn_impl: str) -> None:
             bytes_ += 2.0 * B * Hq * Sq * eff * 4.0  # scores+probs, f32
         cost.add(op, flops, bytes_, mult)
         return
+    if op == "SwiGLU":
+        x, wg, _wu, wd = node.inputs
+        D, F = wg.shape
+        Do = wd.shape[1]
+        rows = out_elems / max(Do, 1)
+        flops = 2.0 * rows * D * F * 2 + 6.0 * rows * F + 2.0 * rows * F * Do
+        cost.add(op, flops, _io_bytes(node), mult)
+        return
+    if op == "NormMatmul":
+        x, _w, w2 = node.inputs
+        D, N = w2.shape
+        rows = out_elems / max(N, 1)
+        cost.add(op, 2.0 * rows * D * N + 5.0 * rows * D,
+                 _io_bytes(node), mult)
+        return
+    if op == "RotaryQKV":
+        x, wq, wk, _wv = node.inputs[:4]
+        B, S, D = x.shape
+        proj = 2.0 * B * S * D * (wq.shape[1] + 2 * wk.shape[1])
+        tq, tk = node.out_types[0], node.out_types[1]
+        rope = 6.0 * (tq.size + tk.size)
+        cost.add(op, proj + rope, _io_bytes(node), mult)
+        return
     if op in ("Softmax", "LogSoftmax"):
         cost.add(op, 5.0 * out_elems, _io_bytes(node), mult)
         return

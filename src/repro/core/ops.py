@@ -683,6 +683,95 @@ def attention(
                 [q.type.with_shape((B, Hq, Sq, Dv))]).out()
 
 
+_register("SwiGLU")
+
+
+def swiglu(x: Value, w_gate: Value, w_up: Value, w_down: Value) -> Value:
+    """Fused SwiGLU MLP: matmul(silu(x @ w_gate) * (x @ w_up), w_down).
+
+    x: (..., D); w_gate/w_up: (D, F); w_down: (F, Do) -> (..., Do).
+    The gate activation stays resident in the kernel (never hits HBM);
+    the interpreter/XLA fallbacks recompute the same math op-by-op.
+    """
+    D = x.shape[-1]
+    for name, w in (("w_gate", w_gate), ("w_up", w_up)):
+        if len(w.shape) != 2 or w.shape[0] != D:
+            raise ValueError(f"swiglu {name} must be ({D}, F), got {w.shape}")
+    if w_gate.shape[1] != w_up.shape[1]:
+        raise ValueError(f"swiglu gate/up widths differ: "
+                         f"{w_gate.shape} vs {w_up.shape}")
+    F = w_gate.shape[1]
+    if len(w_down.shape) != 2 or w_down.shape[0] != F:
+        raise ValueError(f"swiglu w_down must be ({F}, Do), got {w_down.shape}")
+    out_t = TensorType(x.shape[:-1] + (w_down.shape[1],),
+                       promote_dtypes(x.dtype, w_down.dtype))
+    return Node("SwiGLU", [x, w_gate, w_up, w_down], {}, [out_t]).out()
+
+
+_register("NormMatmul")
+
+
+def norm_matmul(x: Value, weight: Value, w: Value, eps: float = 1e-6) -> Value:
+    """Fused RMSNorm feeding a matmul: matmul(rms_norm(x, weight, eps), w).
+
+    x: (..., D); weight: (D,); w: (D, N) -> (..., N).  The normalized
+    rows never round-trip through HBM in the Pallas realization.
+    """
+    D = x.shape[-1]
+    if weight.shape != (D,):
+        raise ValueError(f"norm_matmul weight {weight.shape} != ({D},)")
+    if len(w.shape) != 2 or w.shape[0] != D:
+        raise ValueError(f"norm_matmul w must be ({D}, N), got {w.shape}")
+    out_t = TensorType(x.shape[:-1] + (w.shape[1],),
+                       promote_dtypes(x.dtype, w.dtype))
+    return Node("NormMatmul", [x, weight, w], {"eps": float(eps)},
+                [out_t]).out()
+
+
+_register("RotaryQKV", 3)
+
+
+def rotary_qkv(
+    x: Value,
+    wq: Value,
+    wk: Value,
+    wv: Value,
+    cos: Value,
+    sin: Value,
+    *,
+    n_heads: int,
+    n_kv: int,
+) -> Tuple[Value, Value, Value]:
+    """Fused QKV projection + rotary embedding (rotate-half convention).
+
+    x: (B, S, D); wq: (D, Hq*Dh); wk/wv: (D, Hkv*Dh); cos/sin: (S, Dh/2)
+    -> q: (B, Hq, S, Dh), k: (B, Hkv, S, Dh), v: (B, Hkv, S, Dh), with
+    rope applied to q and k (v is a plain projection).
+    """
+    if len(x.shape) != 3:
+        raise ValueError(f"rotary_qkv x must be (B, S, D), got {x.shape}")
+    B, S, D = x.shape
+    if len(wq.shape) != 2 or wq.shape[0] != D or wq.shape[1] % n_heads:
+        raise ValueError(f"rotary_qkv wq {wq.shape} vs D={D} Hq={n_heads}")
+    Dh = wq.shape[1] // n_heads
+    for name, w in (("wk", wk), ("wv", wv)):
+        if w.shape != (D, n_kv * Dh):
+            raise ValueError(f"rotary_qkv {name} must be ({D}, {n_kv * Dh}), "
+                             f"got {w.shape}")
+    if Dh % 2:
+        raise ValueError(f"rotary_qkv head dim {Dh} must be even")
+    for name, t in (("cos", cos), ("sin", sin)):
+        if t.shape != (S, Dh // 2):
+            raise ValueError(f"rotary_qkv {name} must be ({S}, {Dh // 2}), "
+                             f"got {t.shape}")
+    dt = promote_dtypes(x.dtype, wq.dtype)
+    tq = TensorType((B, n_heads, S, Dh), dt)
+    tkv = TensorType((B, n_kv, S, Dh), dt)
+    n = Node("RotaryQKV", [x, wq, wk, wv, cos, sin],
+             {"n_heads": int(n_heads), "n_kv": int(n_kv)}, [tq, tkv, tkv])
+    return n.out(0), n.out(1), n.out(2)
+
+
 _register("SoftmaxCrossEntropy")
 
 

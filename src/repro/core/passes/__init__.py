@@ -20,7 +20,11 @@ from .memory import MemoryPlan, plan_memory  # noqa: F401
 from .grad_compress import CompressAllReduce  # noqa: F401
 
 
-def standard_pipeline(level: str = "O1", compress_grads: bool = False) -> PassManager:
+def standard_pipeline(level: str = "O1", compress_grads: bool = False,
+                      fuse: dict = None) -> PassManager:
+    """``fuse`` gates the matmul-level compounds individually (keys
+    ``swiglu``/``norm_matmul``/``rotary_qkv``, missing = on) — the
+    autotuner flips them per graph via ``CompileOptions.fuse_*``."""
     if level == "O0":
         return PassManager([])
     passes = [ConstantFolding(), CSE(), AlgebraicSimplify(), LayoutAssignment(),
@@ -28,8 +32,8 @@ def standard_pipeline(level: str = "O1", compress_grads: bool = False) -> PassMa
     if level == "O2":
         # compounding first: constant folding erases the mask subgraphs the
         # attention pattern keys on
-        passes = [FuseCompounds(), ConstantFolding(), CSE(), AlgebraicSimplify(),
-                  LayoutAssignment(), CSE(), DCE()]
+        passes = [FuseCompounds(enable=fuse), ConstantFolding(), CSE(),
+                  AlgebraicSimplify(), LayoutAssignment(), CSE(), DCE()]
         if compress_grads:
             passes.append(CompressAllReduce())
     return PassManager(passes)

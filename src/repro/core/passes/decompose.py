@@ -33,6 +33,51 @@ def decompose_rmsnorm(x: Value, w: Value, eps: float) -> Value:
     return ops.convert(y, x.dtype)
 
 
+def decompose_swiglu(x: Value, w_gate: Value, w_up: Value,
+                     w_down: Value) -> Value:
+    """Mirror of ``components.apply_mlp``'s swiglu emission (minus the
+    sharding constraints, which the fusion matcher skips over)."""
+    g = ops.silu(ops.matmul(x, w_gate))
+    u = ops.matmul(x, w_up)
+    return ops.matmul(ops.multiply(g, u), w_down)
+
+
+def decompose_norm_matmul(x: Value, weight: Value, w: Value,
+                          eps: float) -> Value:
+    return ops.matmul(ops.rms_norm(x, weight, eps=eps), w)
+
+
+def _split_heads(y: Value, n_heads: int) -> Value:
+    B, S, HD = y.shape
+    d = HD // n_heads
+    return ops.transpose(ops.reshape(y, (B, S, n_heads, d)), (0, 2, 1, 3))
+
+
+def _apply_rope(t: Value, cos: Value, sin: Value) -> Value:
+    """Rotate-half rope, op-for-op the ``components.apply_rope`` emission."""
+    B, H, S, D = t.shape
+    half = D // 2
+    x1 = ops.slice_(t, [0, 0, 0, 0], [B, H, S, half])
+    x2 = ops.slice_(t, [0, 0, 0, half], [B, H, S, D])
+    c = ops.convert(ops.broadcast_to(ops.reshape(cos, (1, 1, S, half)),
+                                     (B, H, S, half)), t.dtype)
+    s = ops.convert(ops.broadcast_to(ops.reshape(sin, (1, 1, S, half)),
+                                     (B, H, S, half)), t.dtype)
+    return ops.concat([ops.subtract(ops.multiply(x1, c), ops.multiply(x2, s)),
+                       ops.add(ops.multiply(x2, c), ops.multiply(x1, s))],
+                      axis=3)
+
+
+def decompose_rotary_qkv(node: Node, ins: List[Value]) -> List[Value]:
+    x, wq, wk, wv, cos, sin = ins
+    n_heads = node.attrs["n_heads"]
+    n_kv = node.attrs["n_kv"]
+    q = _split_heads(ops.matmul(x, wq), n_heads)
+    k = _split_heads(ops.matmul(x, wk), n_kv)
+    v = _split_heads(ops.matmul(x, wv), n_kv)
+    return [_apply_rope(q, cos, sin), _apply_rope(k, cos, sin), v]
+
+
 def decompose_attention(node: Node) -> Value:
     at = node.attrs
     q, k, v = node.inputs[:3]
@@ -114,6 +159,16 @@ class Decompose(Pass):
                 stats["expanded"] += 1
                 clone = Node(node.op, ins, dict(node.attrs), node.out_types)
                 return [decompose_attention(clone)]
+            if op == "SwiGLU":
+                stats["expanded"] += 1
+                return [decompose_swiglu(*ins)]
+            if op == "NormMatmul":
+                stats["expanded"] += 1
+                return [decompose_norm_matmul(ins[0], ins[1], ins[2],
+                                              node.attrs["eps"])]
+            if op == "RotaryQKV":
+                stats["expanded"] += 1
+                return decompose_rotary_qkv(node, ins)
             if op == "SoftmaxCrossEntropy":
                 logits, labels = ins
                 stats["expanded"] += 1

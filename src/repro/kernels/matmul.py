@@ -40,7 +40,11 @@ def matmul(a: jax.Array, b: jax.Array, bm: int = 256, bn: int = 256,
     assert K == K2
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     if M % bm or N % bn or K % bk:
-        raise ValueError(f"({M},{K})x({K},{N}) not divisible by ({bm},{bn},{bk})")
+        # No legal tiling for this shape: lower to the XLA dot (same
+        # f32-accumulate numerics) instead of failing the compile —
+        # autotune sweeps over odd shapes must never crash a candidate.
+        return jnp.dot(a, b,
+                       preferred_element_type=jnp.float32).astype(a.dtype)
     n_k = K // bk
     return pl.pallas_call(
         functools.partial(_matmul_kernel, n_k=n_k),

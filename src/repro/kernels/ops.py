@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _flash
 from .matmul import matmul as _matmul
+from .norm_matmul import norm_matmul as _norm_matmul
 from .rmsnorm import rmsnorm_fwd as _rmsnorm
+from .swiglu import swiglu as _swiglu
 from .xla_attention import chunked_attention  # noqa: F401  (re-export)
 
 _SUBLANE = 8
@@ -64,6 +66,40 @@ def matmul(a: jax.Array, b: jax.Array, interpret: bool = True, **kw) -> jax.Arra
     bn = _pick_block(N, kw.pop("bn", 256), _LANE) or N
     bkk = _pick_block(K, kw.pop("bk", 512), _LANE) or K
     return _matmul(a, b, bm=bm, bn=bn, bk=bkk, interpret=interpret)
+
+
+# -- fused swiglu ---------------------------------------------------------------
+def swiglu_supported(m: int, d: int, f: int, do: int) -> bool:
+    """Fused MLP kernel: lane-aligned widths, sublane-aligned rows."""
+    return (d % _LANE == 0 and f % _LANE == 0 and do % _LANE == 0
+            and m % _SUBLANE == 0 and m > 0)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, interpret: bool = True, **kw) -> jax.Array:
+    M, _D = x.shape
+    F = w_gate.shape[1]
+    Do = w_down.shape[1]
+    bm = _pick_block(M, kw.pop("bm", 128), _SUBLANE) or M
+    bn = _pick_block(Do, kw.pop("bn", 256), _LANE) or Do
+    bf = _pick_block(F, kw.pop("bk", 256), _LANE) or F
+    return _swiglu(x, w_gate, w_up, w_down, bm=bm, bn=bn, bf=bf,
+                   interpret=interpret)
+
+
+# -- fused norm+matmul ----------------------------------------------------------
+def norm_matmul_supported(m: int, d: int, n: int) -> bool:
+    return d % _LANE == 0 and n % _LANE == 0 and m % _SUBLANE == 0 and m > 0
+
+
+def norm_matmul(x: jax.Array, g: jax.Array, w: jax.Array,
+                eps: float = 1e-6, interpret: bool = True,
+                **kw) -> jax.Array:
+    M, _D = x.shape
+    N = w.shape[1]
+    bm = _pick_block(M, kw.pop("bm", 128), _SUBLANE) or M
+    bn = _pick_block(N, kw.pop("bn", 256), _LANE) or N
+    return _norm_matmul(x, g, w, eps=eps, bm=bm, bn=bn, interpret=interpret)
 
 
 # -- attention ------------------------------------------------------------------

@@ -20,6 +20,41 @@ def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
 
 
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    """matmul(silu(x @ w_gate) * (x @ w_up), w_down), f32 accumulate."""
+    g = jax.nn.silu(matmul_ref(x, w_gate))
+    u = matmul_ref(x, w_up)
+    return matmul_ref((g * u).astype(x.dtype), w_down)
+
+
+def norm_matmul_ref(x: jax.Array, g: jax.Array, w: jax.Array,
+                    eps: float = 1e-6) -> jax.Array:
+    return matmul_ref(rmsnorm_ref(x, g, eps=eps), w)
+
+
+def rotary_qkv_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                   wv: jax.Array, cos: jax.Array, sin: jax.Array, *,
+                   n_heads: int, n_kv: int):
+    """Fused QKV projection + rotate-half rope; returns (q, k, v) BHSD."""
+    B, S, _D = x.shape
+
+    def split(y, h):
+        return y.reshape(B, S, h, -1).transpose(0, 2, 1, 3)
+
+    def rope(t):
+        half = t.shape[-1] // 2
+        x1, x2 = t[..., :half], t[..., half:]
+        c = cos[None, None].astype(t.dtype)
+        s = sin[None, None].astype(t.dtype)
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+    q = rope(split(matmul_ref(x, wq), n_heads))
+    k = rope(split(matmul_ref(x, wk), n_kv))
+    v = split(matmul_ref(x, wv), n_kv)
+    return q, k, v
+
+
 def attention_ref(
     q: jax.Array,  # (B, Hq, Sq, D)
     k: jax.Array,  # (B, Hkv, Skv, D)

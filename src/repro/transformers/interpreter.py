@@ -351,6 +351,45 @@ def _(node, args):
     return [_out(node, out)]
 
 
+@_ev("SwiGLU")
+def _(node, args):
+    x, wg, wu, wd = (_f32(a) for a in args)
+    g = x @ wg
+    g = g * (1.0 / (1.0 + np.exp(-g)))  # silu
+    h = g * (x @ wu)
+    return [_out(node, h @ wd)]
+
+
+@_ev("NormMatmul")
+def _(node, args):
+    x, w, w2 = (_f32(a) for a in args)
+    var = np.mean(np.square(x), axis=-1, keepdims=True)
+    return [_out(node, (x / np.sqrt(var + node.attrs["eps"]) * w) @ w2)]
+
+
+@_ev("RotaryQKV")
+def _(node, args):
+    x, wq, wk, wv, cos, sin = (_f32(a) for a in args)
+    B, S, _D = x.shape
+    n_heads, n_kv = node.attrs["n_heads"], node.attrs["n_kv"]
+
+    def split(y, h):
+        d = y.shape[-1] // h
+        return y.reshape(B, S, h, d).transpose(0, 2, 1, 3)
+
+    def rope(t):
+        half = t.shape[-1] // 2
+        x1, x2 = t[..., :half], t[..., half:]
+        c = cos[None, None, :, :]
+        s = sin[None, None, :, :]
+        return np.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+    q = rope(split(x @ wq, n_heads))
+    k = rope(split(x @ wk, n_kv))
+    v = split(x @ wv, n_kv)
+    return [_out(node, q, 0), _out(node, k, 1), _out(node, v, 2)]
+
+
 @_ev("SoftmaxCrossEntropy")
 def _(node, args):
     logits, labels = _f32(args[0]), args[1]

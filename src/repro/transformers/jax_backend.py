@@ -42,6 +42,7 @@ class EmitCtx:
     def __init__(self, mode: str = "jit", mesh=None, use_pallas: bool = False,
                  remat_scan: bool = False, interpret_pallas: bool = True,
                  attn_impl: str = "auto", attn_chunk: int = 1024,
+                 mm_bm: int = 256, mm_bn: int = 256, mm_bk: int = 512,
                  axis_rules=None):
         self.mode = mode  # 'jit' | 'shardmap' | 'pjit'
         self.mesh = mesh
@@ -49,6 +50,11 @@ class EmitCtx:
         self.use_pallas = use_pallas
         self.remat_scan = remat_scan
         self.interpret_pallas = interpret_pallas
+        # matmul-family tile shapes (autotune-resolved; consumed by the
+        # Pallas matmul / SwiGLU / NormMatmul realizations)
+        self.mm_bm = mm_bm
+        self.mm_bn = mm_bn
+        self.mm_bk = mm_bk
         # attention realization: 'auto' picks chunked (online-softmax scan)
         # once Sq*Skv would materialize a big score tensor; 'naive'/'chunked'
         # force one implementation (the perf loop sweeps this knob).
@@ -227,9 +233,26 @@ def _(node, args, ctx):
 # -- contraction ----------------------------------------------------------
 @_em("DotGeneral")
 def _(node, args, ctx):
+    a, b = args
     dn = (tuple(node.attrs["contracting"]), tuple(node.attrs["batch"]))
-    out = lax.dot_general(args[0], args[1], dimension_numbers=dn,
-                          preferred_element_type=node.out_types[0].dtype)
+    t = node.out_types[0]
+    # plain matmul-shaped dots route through the Pallas tiled kernel when
+    # the shape tiles cleanly; everything else (batched einsums, one-hot
+    # contractions) keeps the generic XLA lowering
+    if ctx.use_pallas and b.ndim == 2 and a.ndim >= 2 and \
+            dn == (((a.ndim - 1,), (0,)), ((), ())) and \
+            np.dtype(a.dtype) == np.dtype(b.dtype) == t.dtype and \
+            is_float(np.dtype(a.dtype)):
+        kops = _pallas_ops()
+        rows = a.size // a.shape[-1]
+        if kops is not None and \
+                kops.matmul_supported(rows, a.shape[-1], b.shape[1]):
+            out = kops.matmul(a.reshape(rows, a.shape[-1]), b,
+                              bm=ctx.mm_bm, bn=ctx.mm_bn, bk=ctx.mm_bk,
+                              interpret=ctx.interpret_pallas)
+            return [_outcast(node, out.reshape(t.shape))]
+    out = lax.dot_general(a, b, dimension_numbers=dn,
+                          preferred_element_type=t.dtype)
     return [out]
 
 
@@ -292,6 +315,81 @@ def _(node, args, ctx):
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
     return [_outcast(node, (x - mu) * lax.rsqrt(var + node.attrs["eps"]) * w + b)]
+
+
+@_em("SwiGLU")
+def _(node, args, ctx):
+    x, wg, wu, wd = args
+    t = node.out_types[0]
+    d = x.shape[-1]
+    rows = x.size // d
+    kops = _pallas_ops() if ctx.use_pallas else None
+    if kops is not None and \
+            np.dtype(x.dtype) == np.dtype(wg.dtype) == np.dtype(wd.dtype) and \
+            kops.swiglu_supported(rows, d, wg.shape[1], wd.shape[1]):
+        out = kops.swiglu(x.reshape(rows, d), wg, wu, wd,
+                          bm=ctx.mm_bm, bn=ctx.mm_bn, bk=ctx.mm_bk,
+                          interpret=ctx.interpret_pallas)
+        return [_outcast(node, out.reshape(t.shape))]
+    g = jax.nn.silu(jnp.dot(x, wg,
+                            preferred_element_type=jnp.float32).astype(x.dtype))
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32).astype(x.dtype)
+    return [_outcast(node, jnp.dot(g * u, wd,
+                                   preferred_element_type=jnp.float32))]
+
+
+@_em("NormMatmul")
+def _(node, args, ctx):
+    x, g, w = args
+    t = node.out_types[0]
+    d = x.shape[-1]
+    rows = x.size // d
+    kops = _pallas_ops() if ctx.use_pallas else None
+    if kops is not None and np.dtype(x.dtype) == np.dtype(w.dtype) and \
+            kops.norm_matmul_supported(rows, d, w.shape[1]):
+        out = kops.norm_matmul(x.reshape(rows, d), g, w,
+                               eps=node.attrs["eps"], bm=ctx.mm_bm,
+                               bn=ctx.mm_bn, interpret=ctx.interpret_pallas)
+        return [_outcast(node, out.reshape(t.shape))]
+    xf = _f32up(x)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    nrm = (xf * lax.rsqrt(var + node.attrs["eps"]) * _f32up(g)).astype(x.dtype)
+    return [_outcast(node, jnp.dot(nrm, w,
+                                   preferred_element_type=jnp.float32))]
+
+
+@_em("RotaryQKV")
+def _(node, args, ctx):
+    x, wq, wk, wv, cos, sin = args
+    at = node.attrs
+    B, S, D = x.shape
+    kops = _pallas_ops() if ctx.use_pallas else None
+
+    def mm(a2, w):
+        # projections route through the Pallas tiled matmul; the rope
+        # epilogue is elementwise and stays in XLA
+        if kops is not None and np.dtype(x.dtype) == np.dtype(w.dtype) and \
+                kops.matmul_supported(B * S, D, w.shape[1]):
+            return kops.matmul(a2, w, bm=ctx.mm_bm, bn=ctx.mm_bn,
+                               bk=ctx.mm_bk, interpret=ctx.interpret_pallas)
+        return jnp.dot(a2, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    def split(y, h):
+        return y.reshape(B, S, h, -1).transpose(0, 2, 1, 3)
+
+    def rope(v4):
+        half = v4.shape[-1] // 2
+        x1, x2 = v4[..., :half], v4[..., half:]
+        c = cos[None, None].astype(v4.dtype)
+        s = sin[None, None].astype(v4.dtype)
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+    x2d = x.reshape(B * S, D)
+    q = rope(split(mm(x2d, wq), at["n_heads"]))
+    k = rope(split(mm(x2d, wk), at["n_kv"]))
+    v = split(mm(x2d, wv), at["n_kv"])
+    return [_outcast(node, q, 0), _outcast(node, k, 1), _outcast(node, v, 2)]
 
 
 def reference_attention(q, k, v, *, causal, window, scale, q_offset=None):

@@ -113,16 +113,27 @@ def test_corrupt_tuning_record_triggers_retune(tmp_path):
         assert autotune.validate_record(json.load(fh)) == []
 
 
+def _v2_knobs(**over):
+    knobs = {"attn_impl": "naive", "attn_chunk": 256, "use_pallas": False,
+             "mm_bm": 256, "mm_bn": 256, "mm_bk": 512,
+             "fuse_swiglu": True, "fuse_norm_matmul": True,
+             "fuse_rotary_qkv": True}
+    knobs.update(over)
+    return knobs
+
+
 def test_validate_record_reports_schema_errors():
     assert autotune.validate_record("nope")
     errs = autotune.validate_record({})
     assert any("missing key 'winner'" in e for e in errs)
+    cand = _v2_knobs()  # no ms
+    win = _v2_knobs()
+    del win["use_pallas"]
     rec = {
         "format": 1, "schema": autotune.SCHEMA, "backend": "jax",
         "signature": "s", "versions": {},
-        "candidates": [{"attn_impl": "naive", "attn_chunk": 256,
-                        "use_pallas": False}],  # no ms
-        "winner": {"attn_impl": "naive", "attn_chunk": 256},  # no use_pallas
+        "candidates": [cand],
+        "winner": win,
     }
     errs = autotune.validate_record(rec)
     assert any("candidates[0] missing 'ms'" in e for e in errs)
@@ -130,6 +141,69 @@ def test_validate_record_reports_schema_errors():
     rec["candidates"][0]["ms"] = 0.5
     rec["winner"]["use_pallas"] = False
     assert autotune.validate_record(rec) == []
+    # v2 records must carry the matmul/fusion knobs too
+    del rec["winner"]["mm_bk"]
+    assert any("winner missing 'mm_bk'" in e
+               for e in autotune.validate_record(rec))
+
+
+def test_validate_record_accepts_stale_v1_records():
+    """CI caches `.repro-cache` across upgrades — v1 (attention-only)
+    records must stay schema-valid, though they never resolve a v2
+    request (the schema is part of the record key)."""
+    rec = {
+        "format": 1, "schema": autotune.SCHEMA_V1, "backend": "jax",
+        "signature": "s", "versions": {},
+        "candidates": [{"attn_impl": "naive", "attn_chunk": 256,
+                        "use_pallas": False, "ms": 0.5}],
+        "winner": {"attn_impl": "naive", "attn_chunk": 256,
+                   "use_pallas": False},
+    }
+    assert autotune.validate_record(rec) == []
+
+
+def _matmul_graph(M=128, K=256, N=128):
+    x = ops.parameter((M, K), "f32", "x")
+    w = ops.parameter((K, N), "f32", "w")
+    return Function([x, w], [ops.matmul(x.out(), w.out())])
+
+
+def test_matmul_tiling_sweep_is_recorded_and_reresolved(tmp_path,
+                                                        monkeypatch):
+    """A Pallas matmul graph sweeps tile shapes; the persisted record
+    re-resolves in a cold process with zero sweep timings."""
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True,
+                          level="O2", use_pallas=True,
+                          interpret_pallas=True)
+    be = Backend.create("jax", fresh=True)
+    fn = _matmul_graph()
+    fams = autotune.tunable_families(fn, opts, be)
+    assert fams == {"matmul", "fusion"}  # no attention in this graph
+    cf = be.compile(fn, opts)
+    assert be.cache_stats().autotune_sweeps == 1
+    [rec_path] = glob.glob(os.path.join(str(tmp_path), "autotune",
+                                        "*.tune.json"))
+    with open(rec_path) as fh:
+        rec = json.load(fh)
+    assert autotune.validate_record(rec) == []
+    assert rec["schema"] == autotune.SCHEMA
+    # the grid actually varied tile shapes, and the winner can't regress
+    # candidate 0 (the static default)
+    assert len({(c["mm_bm"], c["mm_bn"], c["mm_bk"])
+                for c in rec["candidates"]}) > 1
+    assert min(c["ms"] for c in rec["candidates"]) \
+        <= rec["candidates"][0]["ms"]
+    assert cf.options.mm_bm == rec["winner"]["mm_bm"]
+
+    be2 = Backend.create("jax", fresh=True)
+
+    def boom(*a, **k):
+        raise AssertionError("sweep re-ran despite a persisted record")
+
+    monkeypatch.setattr(autotune, "sweep", boom)
+    be2.compile(fn, opts)
+    st = be2.cache_stats()
+    assert st.autotune_hits == 1 and st.autotune_sweeps == 0
 
 
 def test_sweep_drops_losing_candidates_disk_entries(tmp_path):

@@ -102,3 +102,109 @@ def test_kernel_selection_predicates():
     assert kops.attention_supported((1, 1, 128, 128), (1, 1, 896, 128))
     assert not kops.rmsnorm_supported((7, 100))
     assert kops.rmsnorm_supported((16, 256))
+
+
+# -- fused compound kernels (PR 7) --------------------------------------------
+from repro.kernels.ref import norm_matmul_ref, rotary_qkv_ref, swiglu_ref
+
+
+@pytest.mark.parametrize("m,d,f,do", [(64, 128, 256, 128),
+                                      (128, 256, 512, 256),
+                                      (8, 128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu_sweep(m, d, f, do, dtype):
+    x = jnp.asarray(RNG.normal(size=(m, d)) * 0.1, dtype)
+    wg = jnp.asarray(RNG.normal(size=(d, f)) * 0.05, dtype)
+    wu = jnp.asarray(RNG.normal(size=(d, f)) * 0.05, dtype)
+    wd = jnp.asarray(RNG.normal(size=(f, do)) * 0.05, dtype)
+    assert kops.swiglu_supported(m, d, f, do)
+    out = kops.swiglu(x, wg, wu, wd, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(swiglu_ref(x, wg, wu, wd),
+                                          np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,d,n", [(64, 128, 128), (128, 256, 384),
+                                   (8, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_norm_matmul_sweep(m, d, n, dtype):
+    x = jnp.asarray(RNG.normal(size=(m, d)), dtype)
+    g = jnp.asarray(RNG.normal(size=(d,)) * 0.1 + 1.0, dtype)
+    w = jnp.asarray(RNG.normal(size=(d, n)) * 0.05, dtype)
+    assert kops.norm_matmul_supported(m, d, n)
+    out = kops.norm_matmul(x, g, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(norm_matmul_ref(x, g, w),
+                                          np.float32),
+                               **_tol(dtype))
+
+
+def test_rotary_qkv_ref_matches_unfused_composition():
+    """The compound oracle must equal project -> split-heads -> rope."""
+    B, S, D, H = 2, 16, 64, 4
+    Dh = D // H
+    x = jnp.asarray(RNG.normal(size=(B, S, D)) * 0.3, jnp.float32)
+    wq = jnp.asarray(RNG.normal(size=(D, D)) * 0.1, jnp.float32)
+    wk = jnp.asarray(RNG.normal(size=(D, 2 * Dh)) * 0.1, jnp.float32)
+    wv = jnp.asarray(RNG.normal(size=(D, 2 * Dh)) * 0.1, jnp.float32)
+    ang = np.arange(S)[:, None] / (10_000.0 ** (np.arange(Dh // 2) / Dh))
+    cos = jnp.asarray(np.cos(ang), jnp.float32)
+    sin = jnp.asarray(np.sin(ang), jnp.float32)
+    q, k, v = rotary_qkv_ref(x, wq, wk, wv, cos, sin, n_heads=H, n_kv=2)
+
+    def split(y, h):
+        return y.reshape(B, S, h, Dh).transpose(0, 2, 1, 3)
+
+    def rope(t):
+        x1, x2 = t[..., :Dh // 2], t[..., Dh // 2:]
+        c, s = cos[None, None], sin[None, None]
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+    np.testing.assert_allclose(np.asarray(q), np.asarray(
+        rope(split(jnp.dot(x, wq), H))), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(
+        rope(split(jnp.dot(x, wk), 2))), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(
+        split(jnp.dot(x, wv), 2)), atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 100, 33), (130, 128, 128),
+                                   (128, 200, 128)])
+def test_matmul_odd_shapes_fall_back_instead_of_asserting(m, k, n):
+    """Non-tile-multiple shapes lower to the XLA reference — autotune
+    sweeps over odd shapes must never crash a candidate."""
+    from repro.kernels.matmul import matmul as raw_matmul
+    a = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    out = raw_matmul(a, b, bm=8, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_kernels_odd_shapes_fall_back():
+    from repro.kernels.swiglu import swiglu as raw_swiglu
+    from repro.kernels.norm_matmul import norm_matmul as raw_norm_matmul
+    x = jnp.asarray(RNG.normal(size=(7, 96)) * 0.1, jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(96, 100)) * 0.05, jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(96, 100)) * 0.05, jnp.float32)
+    wd = jnp.asarray(RNG.normal(size=(100, 48)) * 0.05, jnp.float32)
+    out = raw_swiglu(x, wg, wu, wd, bm=8, bn=128, bf=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(swiglu_ref(x, wg, wu, wd)),
+                               atol=1e-5, rtol=1e-4)
+    g = jnp.asarray(RNG.normal(size=(96,)) * 0.1 + 1.0, jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(96, 33)) * 0.05, jnp.float32)
+    out = raw_norm_matmul(x, g, w, bm=8, bn=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(norm_matmul_ref(x, g, w)),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_fused_kernel_selection_predicates():
+    assert kops.swiglu_supported(128, 256, 512, 256)
+    assert not kops.swiglu_supported(7, 256, 512, 256)    # rows not 8-aligned
+    assert not kops.swiglu_supported(128, 100, 512, 256)  # D not lane-aligned
+    assert kops.norm_matmul_supported(8, 128, 384)
+    assert not kops.norm_matmul_supported(8, 384, 100)

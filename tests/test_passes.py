@@ -170,3 +170,170 @@ def test_full_pipeline_preserves_semantics():
             np.abs(RNG.normal(size=(16,))).astype(np.float32)]
     np.testing.assert_allclose(run_both(fn, *args)[0],
                                run_both(out, *args)[0], atol=1e-5)
+
+
+# -- fused matmul-family compounds (PR 7) -------------------------------------
+def _swiglu_graph(M=8, D=32, F=64, Do=32, dtype="f32"):
+    x = ops.parameter((M, D), dtype, "x")
+    wg = ops.parameter((D, F), dtype, "wg")
+    wu = ops.parameter((D, F), dtype, "wu")
+    wd = ops.parameter((F, Do), dtype, "wd")
+    return Function([x, wg, wu, wd],
+                    [ops.swiglu(x.out(), wg.out(), wu.out(), wd.out())])
+
+
+def test_swiglu_roundtrip():
+    """SwiGLU decomposes to 3 matmuls + silu + multiply and re-fuses."""
+    fn = _swiglu_graph()
+    dec, dstats = Decompose().run(fn)
+    assert dstats["expanded"] >= 1
+    assert "SwiGLU" not in dec.op_counts()
+    assert dec.op_counts()["DotGeneral"] == 3
+    fused, fstats = FuseCompounds().run(dec)
+    assert fstats["swiglu"] == 1
+    assert fused.op_counts() == {"Parameter": 4, "SwiGLU": 1}
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.1).astype(np.float32)
+            for p in fn.parameters]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(fused, *args)[0], atol=1e-5)
+
+
+def test_norm_matmul_roundtrip():
+    x = ops.parameter((8, 32), "f32", "x")
+    g = ops.parameter((32,), "f32", "g")
+    w = ops.parameter((32, 48), "f32", "w")
+    fn = Function([x, g, w],
+                  [ops.norm_matmul(x.out(), g.out(), w.out(), eps=1e-5)])
+    dec, _ = Decompose().run(fn)
+    assert "NormMatmul" not in dec.op_counts()
+    fused, fstats = FuseCompounds().run(dec)
+    assert fstats["norm_matmul"] == 1
+    node = [n for n in fused.nodes() if n.op == "NormMatmul"][0]
+    assert node.attrs["eps"] == pytest.approx(1e-5)
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.1).astype(np.float32)
+            for p in fn.parameters]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(fused, *args)[0], atol=1e-5)
+
+
+def _rotary_attention_graph(B=2, S=8, D=32, n_heads=2, n_kv=2, dtype="f32"):
+    Dh = D // n_heads
+    x = ops.parameter((B, S, D), dtype, "x")
+    wq = ops.parameter((D, n_heads * Dh), dtype, "wq")
+    wk = ops.parameter((D, n_kv * Dh), dtype, "wk")
+    wv = ops.parameter((D, n_kv * Dh), dtype, "wv")
+    cos = ops.parameter((S, Dh // 2), dtype, "cos")
+    sin = ops.parameter((S, Dh // 2), dtype, "sin")
+    q, k, v = ops.rotary_qkv(x.out(), wq.out(), wk.out(), wv.out(),
+                             cos.out(), sin.out(),
+                             n_heads=n_heads, n_kv=n_kv)
+    y = ops.attention(q, k, v, causal=True)
+    return Function([x, wq, wk, wv, cos, sin], [y])
+
+
+def test_rotary_qkv_roundtrip():
+    """RotaryQKV decomposes to projections + rope and re-fuses at the
+    Attention root."""
+    fn = _rotary_attention_graph()
+    dec, _ = Decompose().run(fn)
+    assert "RotaryQKV" not in dec.op_counts()
+    assert "Attention" not in dec.op_counts()
+    fused, fstats = FuseCompounds().run(dec)
+    assert fstats["attention"] == 1
+    assert fstats["rotary_qkv"] == 1
+    counts = fused.op_counts()
+    assert counts.get("RotaryQKV", 0) == 1 and counts.get("Attention", 0) == 1
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.3).astype(np.float32)
+            for p in fn.parameters]
+    np.testing.assert_allclose(run_both(fn, *args)[0],
+                               run_both(fused, *args)[0], atol=1e-4)
+
+
+def test_fusion_gates_disable_individual_compounds():
+    fn = _swiglu_graph()
+    dec, _ = Decompose().run(fn)
+    fused, fstats = FuseCompounds(enable={"swiglu": False}).run(dec)
+    assert fstats["swiglu"] == 0
+    assert "SwiGLU" not in fused.op_counts()
+    # norm_matmul must not steal the gate/up matmuls either way
+    refused, rstats = FuseCompounds().run(dec)
+    assert rstats["swiglu"] == 1
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+@pytest.mark.parametrize("shape", [(8, 32, 64, 32),      # tile-unfriendly
+                                   (128, 256, 256, 128)])  # kernel-eligible
+def test_swiglu_interpreter_vs_jax_parity(dtype, shape):
+    """The compound must compute the same thing on the numpy interpreter
+    and the jax backend (Pallas kernel where supported, XLA fallback on
+    non-tile-multiple shapes)."""
+    M, D, F, Do = shape
+    fn = _swiglu_graph(M, D, F, Do, dtype)
+    np_dt = np.float32 if dtype == "f32" else __import__(
+        "ml_dtypes").bfloat16
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.1).astype(np_dt)
+            for p in fn.parameters]
+    ref = Backend.create("interpreter").compile(fn)(*args)[0]
+    got = Backend.create("jax").compile(
+        fn, CompileOptions(use_pallas=True, interpret_pallas=True))(*args)[0]
+    tol = 1e-5 if dtype == "f32" else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+@pytest.mark.parametrize("shape", [(8, 48, 56), (128, 256, 128)])
+def test_norm_matmul_interpreter_vs_jax_parity(dtype, shape):
+    M, D, N = shape
+    x = ops.parameter((M, D), dtype, "x")
+    g = ops.parameter((D,), dtype, "g")
+    w = ops.parameter((D, N), dtype, "w")
+    fn = Function([x, g, w], [ops.norm_matmul(x.out(), g.out(), w.out())])
+    np_dt = np.float32 if dtype == "f32" else __import__(
+        "ml_dtypes").bfloat16
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.1).astype(np_dt)
+            for p in fn.parameters]
+    ref = Backend.create("interpreter").compile(fn)(*args)[0]
+    got = Backend.create("jax").compile(
+        fn, CompileOptions(use_pallas=True, interpret_pallas=True))(*args)[0]
+    tol = 1e-5 if dtype == "f32" else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+def test_rotary_qkv_interpreter_vs_jax_parity(dtype):
+    fn = _rotary_attention_graph(B=1, S=8, D=32, dtype=dtype)
+    np_dt = np.float32 if dtype == "f32" else __import__(
+        "ml_dtypes").bfloat16
+    args = [(RNG.normal(size=p.out_types[0].shape) * 0.3).astype(np_dt)
+            for p in fn.parameters]
+    ref = Backend.create("interpreter").compile(fn)(*args)[0]
+    got = Backend.create("jax").compile(
+        fn, CompileOptions(use_pallas=True, interpret_pallas=True))(*args)[0]
+    tol = 1e-5 if dtype == "f32" else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_fusion_fires_on_dense_model_graphs_at_O2():
+    """Acceptance: swiglu + norm_matmul fusion fires on the dense-family
+    serve and train graphs (the layers live inside Scan bodies)."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models.lm import build_graphs
+    cfg = get_config("deepseek-7b").reduced()
+    for kind in ("train", "serve"):
+        g = build_graphs(cfg, ShapeConfig(kind, kind, 16, 2), 2)
+        _, report = run_pipeline(g.fn, "O2")
+        fc = dict(report.stats)["fuse-compounds"]
+        assert fc["swiglu"] >= 1, (kind, fc)
+        assert fc["norm_matmul"] >= 1, (kind, fc)
+    # rotary+QKV fuses on the train path (prefill/decode use per-row
+    # rope tables the compound intentionally rejects)
+    g = build_graphs(cfg, ShapeConfig("train", "train", 16, 2), 2)
+    _, report = run_pipeline(g.fn, "O2")
+    assert dict(report.stats)["fuse-compounds"]["rotary_qkv"] >= 1

@@ -19,6 +19,11 @@
                     continuous pool on a mixed-length workload: decode
                     tok/s and KV bytes per active token (paged must
                     allocate strictly fewer), greedy token parity
+  E15 faults      — request-lifecycle fault tolerance: cancel reclaim
+                    latency at a chunk boundary, deadline expiry, and
+                    dispatch-failure containment — every scenario must
+                    leave pages_in_use == 0 and keep token parity for
+                    the uninjected survivor
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
 diffing across commits; rows also accumulate in ``ROWS`` so
@@ -660,6 +665,91 @@ def bench_server():
          srv.engine_report.late_admissions, "reqs")
 
 
+def bench_faults():
+    """E15: the request-lifecycle fault-tolerance contract under load.
+
+    Three injected scenarios against the paged engine, each gated on
+    the same invariant the chaos CI leg enforces: the pool drains to
+    exactly zero pages and the request that was *not* injected decodes
+    token-for-token what a clean solo run produces.
+
+      * cancel   — ``cancel(rid)`` mid-flight; the headline row is the
+        wall-clock from the cancel call to the chunk boundary where the
+        slot and pages actually return (``faults_cancel_reclaim_ms``);
+      * deadline — a request whose deadline expires mid-decode retires
+        as ``deadline_exceeded`` keeping its partial tokens;
+      * dispatch failure — an injected ``dispatch.raise`` fails the
+        in-flight request with a structured error and degrades (never
+        kills) the engine, which then serves a fresh request exactly.
+    """
+    from repro.configs import get_config
+    from repro.launch.engine import ServeEngine
+    from repro.launch.faults import FaultInjector
+
+    cfg = get_config("deepseek-7b").reduced()
+    P, G = 4, 8
+    rng = np.random.default_rng(0)
+    pa = rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
+
+    def make_engine(faults=None):
+        return ServeEngine(cfg, slots=2, max_len=40, mode="paged", seed=0,
+                           page_size=4, chunk_steps=1, faults=faults)
+
+    solo = make_engine()
+    rs = solo.submit(pb, G)
+    ref = list(solo.run().results[rs])
+
+    # -- cancel: reclaim latency at the chunk boundary -----------------------
+    eng = make_engine()
+    ra = eng.submit(pa, 32)
+    rb = eng.submit(pb, G)
+    eng.step()
+    assert eng.cancel(ra, "bench cancel") is True
+    t0 = time.perf_counter()
+    eng.step()  # the boundary where the cancel lands
+    reclaim_ms = (time.perf_counter() - t0) * 1e3
+    assert eng._requests[ra].slot is None, "cancel did not free the slot"
+    rep = eng.run()
+    parity = list(rep.results[rb]) == ref
+    cancelled = rep.counters["cancelled"]
+    pages_ok = eng.pool.pages_in_use == 0 and eng.pool.verify() == []
+    emit("E15_faults", "faults_cancel_reclaim_ms", reclaim_ms, "ms")
+
+    # -- deadline: expiry mid-decode is its own terminal status --------------
+    eng = make_engine()
+    rd = eng.submit(pa, 32, deadline_s=60.0)
+    eng.step()
+    eng._requests[rd].deadline = 0.0  # expire deterministically
+    eng.step()
+    rep = eng.run()
+    deadline_total = rep.counters["deadline_exceeded"]
+    pages_ok &= eng.pool.pages_in_use == 0 and eng.pool.verify() == []
+
+    # -- dispatch failure: contained, degraded, still serving ----------------
+    eng = make_engine(faults=FaultInjector("dispatch.raise=after:2"))
+    ri = eng.submit(pa, G)
+    eng.step()
+    eng.step()  # injected FaultError: contained, request failed
+    contained = (eng._requests[ri].status == "failed"
+                 and eng.health == "degraded")
+    rb2 = eng.submit(pb, G)
+    rep = eng.run()
+    parity &= list(rep.results[rb2]) == ref
+    engine_errors = rep.counters["engine_errors"]
+    pages_ok &= eng.pool.pages_in_use == 0 and eng.pool.verify() == []
+
+    emit("E15_faults", "faults_cancelled_total", cancelled, "reqs")
+    emit("E15_faults", "faults_deadline_total", deadline_total, "reqs")
+    emit("E15_faults", "faults_engine_errors_total", engine_errors, "errors")
+    emit("E15_faults", "faults_dispatch_contained", int(contained), "bool")
+    emit("E15_faults", "faults_pages_reclaimed", int(pages_ok), "bool")
+    emit("E15_faults", "faults_uninjected_parity", int(parity), "bool")
+    assert contained, "dispatch failure was not contained"
+    assert pages_ok, "a fault scenario leaked pages"
+    assert parity, "an uninjected request lost token parity"
+
+
 def bench_scaling():
     """The dry-run roofline table (claim E8 / deliverable g)."""
     base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -723,6 +813,7 @@ SECTIONS = {
     "server": bench_server,
     "autotune": bench_autotune,
     "kernels": bench_kernels,
+    "faults": bench_faults,
     "scaling": bench_scaling,
     "train_loop": bench_train_loop,
 }

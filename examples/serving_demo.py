@@ -18,6 +18,13 @@ a paged engine and talks to it like a network client would: a streaming
 prompt, and the ``GET /v1/metrics`` SLO snapshot — then drains the
 server and shows the pool came back empty.
 
+The fourth section exercises the fault-tolerance contract (PR 8):
+cancelling a mid-flight request at a chunk boundary (slot and pages
+verifiably return), a per-request deadline expiring into its own
+``deadline_exceeded`` terminal status, and a deterministic
+``FaultInjector`` raising inside dispatch — contained into a structured
+per-request failure with the engine degraded but still serving.
+
 The final section shows the fused-kernel layer underneath: compiling a
 serve-family graph at O2 pattern-matches the unfused matmul chains into
 SwiGLU / NormMatmul / RotaryQKV compound ops (per-compound hit counts
@@ -150,6 +157,46 @@ def main():
               f"engine {metrics['engine']}")
     print(f"drained: drain_ok={srv.drain_ok} "
           f"pages_in_use={engine.pool.pages_in_use}")
+
+    # --- fault tolerance: cancel, deadline, injected dispatch failure ---
+    print("--- fault tolerance ---")
+    from repro.launch.faults import FaultInjector
+
+    eng = ServeEngine(cfg, slots=2, max_len=40, mode="paged", seed=0,
+                      page_size=4, chunk_steps=1)
+    ra = eng.submit(workload[0][0], 24)
+    rb = eng.submit(workload[1][0], 8)
+    eng.step()  # both admitted, first tokens decoded
+    eng.cancel(ra, "user hit stop")
+    eng.step()  # the chunk boundary where the cancel lands
+    req = eng._requests[ra]
+    print(f"cancelled req{ra}: status={req.status!r} "
+          f"kept {len(req.tokens)} tokens, pool active={eng.pool.active} "
+          f"pages_in_use={eng.pool.pages_in_use}")
+    rd = eng.submit(workload[2][0], 24, deadline_s=30.0)
+    eng.step()
+    eng._requests[rd].deadline = 0.0  # force expiry for the demo
+    rep = eng.run()
+    print(f"deadline req{rd}: status={rep.statuses[rd]!r} "
+          f"({rep.errors[rd]})")
+    print(f"survivor req{rb}: status={rep.statuses[rb]!r}, "
+          f"counters={rep.counters}")
+
+    # inject a dispatch failure on a fresh engine: the in-flight request
+    # fails with a structured error, the engine degrades but keeps serving
+    eng = ServeEngine(cfg, slots=2, max_len=40, mode="paged", seed=0,
+                      page_size=4, chunk_steps=1,
+                      faults=FaultInjector("dispatch.raise=after:2"))
+    ri = eng.submit(workload[0][0], 8)
+    eng.step()
+    eng.step()  # injected FaultError, contained
+    print(f"injected req{ri}: status={eng._requests[ri].status!r} "
+          f"health={eng.health!r}")
+    rb2 = eng.submit(workload[1][0], 6)
+    rep = eng.run()
+    print(f"degraded engine still serves: req{rb2} -> "
+          f"{rep.results[rb2].tolist()} "
+          f"(pages_in_use={eng.pool.pages_in_use})")
 
     # --- fused compound kernels + the autotuned knob resolution ---
     print("--- fused kernels ---")

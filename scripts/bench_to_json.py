@@ -15,7 +15,10 @@ over-subscribed load run with TTFT/sustained-throughput rows,
 server-vs-engine parity == 1, and a clean drain, and the kernels
 section (E14) must show fused-vs-unfused microbenchmarks whose
 autotune-selected ratios are <= 1 plus clean fallback/re-resolve
-invariants.  Every failure is a
+invariants, and the faults section (E15) must show the fault-tolerance
+contract rows: a positive cancel-reclaim latency, each lifecycle
+counter moved, and the containment/reclaim/parity invariants all == 1.
+Every failure is a
 readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
 diff, never a bare traceback), and the exit code is non-zero.
@@ -78,6 +81,18 @@ REQUIRED_KERNELS_ROWS = (
     "matmul_default_tile_ms", "matmul_best_tile_ms",
     "matmul_best_over_default",
     "matmul_reresolve_sweep_free", "matmul_fallback_ok",
+)
+# E15: request-lifecycle fault tolerance.  The reclaim latency is the
+# headline; the counter rows prove each injected fault exercised its
+# distinct terminal path; the *_1 rows are the recovery invariants
+# (containment, exact page reclamation, uninjected token parity) and
+# are re-asserted below so a hand-edited snapshot cannot claim them.
+REQUIRED_FAULTS_ROWS = (
+    "faults_cancel_reclaim_ms",
+    "faults_cancelled_total", "faults_deadline_total",
+    "faults_engine_errors_total",
+    "faults_dispatch_contained", "faults_pages_reclaimed",
+    "faults_uninjected_parity",
 )
 
 
@@ -230,6 +245,14 @@ def check(path: str) -> int:
             v = vals.get(name)
             if v is not None and v != 1:
                 errors.append(f"kernels row {name} must be 1, got {v}")
+    if "faults" in (doc.get("sections") or []):
+        vals = require("faults", "E15_faults", REQUIRED_FAULTS_ROWS)
+        for name in ("faults_dispatch_contained", "faults_pages_reclaimed",
+                     "faults_uninjected_parity"):
+            v = vals.get(name)
+            if v is not None and v != 1:
+                errors.append(f"faults row {name} must be 1 (the "
+                              f"fault-tolerance recovery contract), got {v}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -268,7 +291,8 @@ def check_autotune_dir(tune_dir: str) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
-                    default=["serving", "paged", "server", "kernels"])
+                    default=["serving", "paged", "server", "kernels",
+                             "faults"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

@@ -1,0 +1,217 @@
+"""CI chaos leg: inject faults at every site, gate the recovery contract.
+
+``python scripts/chaos_probe.py --report-json engine-report-chaos.json``
+runs one scenario per fault-tolerance path (PR 8) against real engines
+and the real HTTP front door, each with a deterministic
+:class:`repro.launch.faults.FaultInjector` schedule:
+
+  * ``dispatch_failure``  — ``dispatch.raise`` mid-serve: the in-flight
+    request fails with a structured error, the engine degrades (never
+    dies), and an uninjected follow-up request still decodes
+    token-for-token what a clean engine produces.
+  * ``deadline_expiry``   — the client ``timeout`` knob becomes an
+    engine deadline; the stream ends ``deadline_exceeded``.
+  * ``disconnect_storm``  — every loadgen client hangs up mid-stream
+    (``client.disconnect_after_n``); the server cancels each request.
+  * ``cancel``            — direct-engine ``cancel(rid)`` at a chunk
+    boundary; the survivor keeps exact token parity with a solo run.
+
+Every scenario must end with ``pages_in_use == 0``, zero leaked slots,
+a clean drain, and token parity for whatever was not injected.  The
+report (``mode == "chaos"``) joins the serving-matrix artifacts;
+``scripts/check_serving_matrix.py`` requires it and gates the
+``cancelled`` / ``deadline_exceeded`` / ``engine_errors`` counters.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import faults, loadgen
+from repro.launch.engine import ServeEngine
+from repro.launch.faults import FaultInjector
+from repro.launch.server import running_server
+
+CFG = get_config("deepseek-7b").reduced()
+P, G = 4, 8
+
+
+def _engine(slots=2, max_len=16, injector=None, **kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("chunk_steps", 1)
+    return ServeEngine(CFG, slots=slots, max_len=max_len, mode="paged",
+                       seed=0, faults=injector, **kw)
+
+
+def _prompts(n: int) -> List[np.ndarray]:
+    return loadgen.make_prompts(n, P, CFG.vocab, seed=0)
+
+
+def _reference(prompt, gen) -> List[int]:
+    eng = _engine()
+    rid = eng.submit(prompt, gen)
+    return [int(t) for t in eng.run().results[rid]]
+
+
+def _gate(checks: Dict[str, bool]) -> Dict:
+    return {"ok": all(checks.values()), "checks": checks}
+
+
+def scenario_dispatch_failure() -> Dict:
+    eng = _engine(injector=FaultInjector("dispatch.raise=after:3"))
+    ref = _reference(_prompts(1)[0], G)
+    with running_server(eng, max_wait_queue=4) as srv:
+        r1 = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"prompt": [int(t) for t in _prompts(1)[0]],
+                           "max_new": G, "tag": "injected"}, timeout=300))
+        # the engine degraded but keeps serving: an uninjected request
+        # must decode exactly what a clean engine decodes
+        r2 = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"prompt": [int(t) for t in _prompts(1)[0]],
+                           "max_new": G, "tag": "clean"}, timeout=300))
+    rep = srv.engine_report
+    return _gate({
+        "injected_failed": r1.terminal == "failed"
+                           and "FaultError" in (r1.error or ""),
+        "clean_parity": r2.terminal == "completed" and r2.tokens == ref,
+        "engine_degraded": rep is not None and rep.health == "degraded",
+        "engine_errors_counted":
+            rep is not None and rep.counters["engine_errors"] >= 1,
+        "pages_reclaimed": eng.pool.pages_in_use == 0,
+        "slots_reclaimed": eng.pool.active == 0,
+        "drain_ok": srv.drain_ok is True,
+    }) | {"counters": dict(rep.counters) if rep else {}}
+
+
+def scenario_deadline_expiry() -> Dict:
+    eng = _engine()
+    ref = _reference(_prompts(1)[0], G)
+    with running_server(eng, max_wait_queue=4) as srv:
+        r1 = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"prompt": [int(t) for t in _prompts(1)[0]],
+                           "max_new": G, "timeout": 1e-3,
+                           "tag": "deadline"}, timeout=300))
+        r2 = asyncio.run(loadgen.stream_generate(
+            srv.base_url, {"prompt": [int(t) for t in _prompts(1)[0]],
+                           "max_new": G, "tag": "clean"}, timeout=300))
+    rep = srv.engine_report
+    return _gate({
+        "deadline_terminal": r1.terminal == "deadline_exceeded",
+        "partial_stream": len(r1.tokens) < G,
+        "clean_parity": r2.terminal == "completed" and r2.tokens == ref,
+        "deadline_counted":
+            rep is not None and rep.counters["deadline_exceeded"] >= 1,
+        "pages_reclaimed": eng.pool.pages_in_use == 0,
+        "slots_reclaimed": eng.pool.active == 0,
+        "drain_ok": srv.drain_ok is True,
+    }) | {"counters": dict(rep.counters) if rep else {}}
+
+
+def scenario_disconnect_storm() -> Dict:
+    n = 3
+    eng = _engine(slots=2, max_len=40)
+    faults.configure("client.disconnect_after_n=always:2")
+    try:
+        with running_server(eng, max_wait_queue=n) as srv:
+            res = loadgen.run_load(srv.base_url, _prompts(n), 32)
+            # give the server time to notice every dead socket before
+            # the drain freezes the counters
+            deadline = time.monotonic() + 60
+            while time.monotonic() < deadline and \
+                    eng.counters["cancelled"] < n:
+                time.sleep(0.05)
+    finally:
+        faults.configure("")
+    rep = srv.engine_report
+    return _gate({
+        "all_disconnected": res.disconnects == n,
+        "all_cancelled":
+            rep is not None and rep.counters["cancelled"] == n,
+        "pages_reclaimed": eng.pool.pages_in_use == 0,
+        "slots_reclaimed": eng.pool.active == 0,
+        "drain_ok": srv.drain_ok is True,
+    }) | {"counters": dict(rep.counters) if rep else {}}
+
+
+def scenario_cancel() -> Dict:
+    prompts = _prompts(2)
+    ref = _reference(prompts[1], G)
+    eng = _engine()
+    ra = eng.submit(prompts[0], G)
+    rb = eng.submit(prompts[1], G)
+    eng.step()
+    cancelled = eng.cancel(ra, "chaos probe")
+    t0 = time.perf_counter()
+    eng.step()  # the boundary where the cancel lands
+    reclaim_ms = (time.perf_counter() - t0) * 1e3
+    freed = eng._requests[ra].slot is None
+    rep = eng.run()
+    return _gate({
+        "cancel_accepted": cancelled is True,
+        "slot_freed_at_boundary": freed,
+        "terminal_status": rep.statuses[ra] == "cancelled",
+        "survivor_parity": [int(t) for t in rep.results[rb]] == ref,
+        "accounting_exact": eng.pool.verify() == [],
+        "pages_reclaimed": eng.pool.pages_in_use == 0,
+        "slots_reclaimed": eng.pool.active == 0,
+    }) | {"counters": dict(rep.counters), "reclaim_ms": reclaim_ms}
+
+
+SCENARIOS = {
+    "dispatch_failure": scenario_dispatch_failure,
+    "deadline_expiry": scenario_deadline_expiry,
+    "disconnect_storm": scenario_disconnect_storm,
+    "cancel": scenario_cancel,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report-json", metavar="FILE", default=None,
+                    help="write the chaos report (serving-matrix artifact)")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="run one scenario (default: all)")
+    args = ap.parse_args(argv)
+
+    names = [args.scenario] if args.scenario else list(SCENARIOS)
+    scenarios: Dict[str, Dict] = {}
+    counters = {"cancelled": 0, "deadline_exceeded": 0, "failed": 0,
+                "completed": 0, "engine_errors": 0}
+    failed = False
+    for name in names:
+        t0 = time.perf_counter()
+        out = SCENARIOS[name]()
+        out["seconds"] = round(time.perf_counter() - t0, 3)
+        scenarios[name] = out
+        for k in counters:
+            counters[k] += out.get("counters", {}).get(k, 0)
+        status = "ok" if out["ok"] else "FAIL"
+        print(f"[chaos:{name}] {status} in {out['seconds']}s "
+              + " ".join(f"{k}={'ok' if v else 'FAIL'}"
+                         for k, v in out["checks"].items()))
+        failed |= not out["ok"]
+
+    doc = {"mode": "chaos", "results": {}, "scenarios": scenarios,
+           "counters": counters}
+    if args.report_json:
+        with open(args.report_json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"[chaos] wrote {args.report_json}")
+    if failed:
+        print("[chaos] FAIL: at least one scenario broke the recovery "
+              "contract", file=sys.stderr)
+        return 1
+    print(f"[chaos] ok: {len(scenarios)} scenarios, counters={counters}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

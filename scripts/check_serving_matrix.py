@@ -23,6 +23,11 @@ contract the modes share:
     order cannot scramble the comparison), drained cleanly
     (``drain_ok`` with ``pages_in_use == 0``), and recorded a positive
     TTFT p95.
+  * the chaos leg (``mode == "chaos"``, written by
+    ``scripts/chaos_probe.py``) ran every fault-injection scenario
+    green, and the ``cancelled`` / ``deadline_exceeded`` /
+    ``engine_errors`` counters each moved — proving the injected faults
+    exercised their distinct terminal paths.
 
 Every failure is a readable ``MATRIX FAIL`` line; exit code 1 on any.
 """
@@ -54,7 +59,8 @@ def _load(paths):
 def check(paths) -> int:
     reports, errors = _load(paths)
     greedy = {m: d for m, d in reports.items()
-              if not d.get("workload", {}).get("temperature")}
+              if m != "chaos"
+              and not d.get("workload", {}).get("temperature")}
 
     if len(greedy) >= 2:
         base_mode = ("continuous" if "continuous" in greedy
@@ -138,6 +144,31 @@ def check(paths) -> int:
         if stats.get("requests_completed", 0) < 1:
             errors.append("server: no requests completed — the leg must "
                           "actually stream")
+
+    chaos = reports.get("chaos")
+    if chaos is None:
+        errors.append(f"no chaos report among {sorted(reports)} — the "
+                      f"matrix must include the fault-injection leg "
+                      f"(scripts/chaos_probe.py --report-json)")
+    else:
+        scen = chaos.get("scenarios") or {}
+        for name in ("dispatch_failure", "deadline_expiry",
+                     "disconnect_storm", "cancel"):
+            s = scen.get(name)
+            if s is None:
+                errors.append(f"chaos: scenario {name!r} missing")
+            elif s.get("ok") is not True:
+                bad = [k for k, v in (s.get("checks") or {}).items()
+                       if not v]
+                errors.append(f"chaos: scenario {name!r} failed "
+                              f"({', '.join(bad) or 'no checks recorded'})")
+        counters = chaos.get("counters") or {}
+        for key in ("cancelled", "deadline_exceeded", "engine_errors"):
+            if not counters.get(key, 0) >= 1:
+                errors.append(
+                    f"chaos: counter {key!r} never moved "
+                    f"(got {counters.get(key)!r}) — the injected faults "
+                    f"did not exercise its terminal path")
 
     if errors:
         for e in errors:

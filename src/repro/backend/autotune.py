@@ -197,8 +197,16 @@ def resolve(backend, fn: Function,
         options.level or backend.default_level)
     rec = _load_record(backend, options, key, mem_key)
     if rec is not None:
-        backend.autotune_hits += 1
-        return static.replace(**_knobs(rec["winner"]))
+        try:
+            resolved = static.replace(**_knobs(rec["winner"]))
+        except Exception:
+            # a schema-valid record can still carry garbage winner
+            # values (torn write racing store_tuning, hand edits);
+            # evict it and re-sweep instead of failing the compile
+            _evict_record(backend, options, key, mem_key)
+        else:
+            backend.autotune_hits += 1
+            return resolved
     result = sweep(backend, fn, static, key=key, families=families)
     backend.autotune_sweeps += 1
     _store_record(backend, fn, options, result, mem_key)
@@ -331,9 +339,24 @@ def _load_record(backend, options: CompileOptions, key: Optional[str],
     disk = backend._disk_for(options)
     if disk is not None:
         rec = disk.load_tuning(key)
-        if rec is not None and not validate_record(rec):
-            return rec
+        if rec is not None:
+            if not validate_record(rec):
+                return rec
+            # parses as JSON but fails the schema (partial write that
+            # still decodes, wrong-version hand edit): evict so it
+            # stops shadowing the re-sweep forever
+            disk.remove_tuning(key)
     return None
+
+
+def _evict_record(backend, options: CompileOptions, key: Optional[str],
+                  mem_key) -> None:
+    """Drop a record that failed to resolve, everywhere it is cached."""
+    backend._autotune_mem.pop(mem_key, None)
+    if key is not None:
+        disk = backend._disk_for(options)
+        if disk is not None:
+            disk.remove_tuning(key)
 
 
 def _store_record(backend, fn: Function, options: CompileOptions,

@@ -334,8 +334,17 @@ class DiskCompileCache:
         except FileNotFoundError:
             return None
         except Exception:
-            self._remove(self.tune_path(key))
+            # torn write / stale format: evict like corrupt compile
+            # entries so the next sweep can re-record cleanly
+            self.remove_tuning(key)
             return None
+
+    def remove_tuning(self, key: str) -> bool:
+        """Evict one tuning record (corrupt or invalidated)."""
+        removed = self._remove(self.tune_path(key))
+        if removed:
+            self.evictions += 1
+        return removed
 
     def store_tuning(self, key: str, record: Dict) -> None:
         try:

@@ -52,8 +52,16 @@ import numpy as np
 from ..backend import Backend, CompileOptions
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models.lm import ModelGraphs, build_graphs
+from .faults import FaultInjector, get_injector
 
 MODES = ("lockstep", "donated", "continuous", "paged")
+# request terminal statuses — every request ends in exactly one; each is
+# counted in ServeEngine.counters and carried in EngineReport.statuses
+TERMINAL_STATUSES = ("completed", "cancelled", "deadline_exceeded", "failed")
+# engine health: "ok" -> "degraded" after a contained dispatch failure
+# (pool verified/rebuilt, still serving) -> "halted" when containment
+# itself failed (submit/step refuse; restart the engine)
+HEALTH_STATES = ("ok", "degraded", "halted")
 # engine-managed step inputs — everything else on a serve/decode graph is
 # a cache/state tensor.  Scoped per graph kind: only the paged graphs
 # declare the page table + sampling knobs, so generic names like "key"
@@ -81,10 +89,21 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     key: int = 0
+    # lifecycle: queued/active, then one of TERMINAL_STATUSES
+    status: str = "queued"
+    error: Optional[str] = None          # structured reason for a
+                                         # cancelled/deadline/failed end
+    deadline: Optional[float] = None     # absolute perf_counter deadline
+    cancel_reason: Optional[str] = None  # set by cancel(); honoured at
+                                         # the next step/chunk boundary
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new
+
+    @property
+    def finished(self) -> bool:
+        return self.status in TERMINAL_STATUSES
 
 
 def _percentile(samples: Sequence[float], q: float) -> float:
@@ -224,6 +243,39 @@ class KVCachePool:
         invalid the moment the raw call consumed them)."""
         assert len(new_buffers) == len(self.buffers)
         self.buffers = list(new_buffers)
+
+    def verify(self) -> List[str]:
+        """Accounting invariants; [] = consistent.  Run by the engine's
+        step-failure containment before deciding whether the pool can be
+        kept or must be rebuilt."""
+        problems = []
+        if len(set(self._free)) != len(self._free):
+            problems.append(f"duplicate slots on the free list: "
+                            f"{sorted(self._free)}")
+        if not all(0 <= s < self.slots for s in self._free):
+            problems.append(f"out-of-range slots on the free list: "
+                            f"{sorted(self._free)}")
+        if self.allocs - self.frees != self.active:
+            problems.append(f"allocs({self.allocs}) - frees({self.frees}) "
+                            f"!= active({self.active})")
+        return problems
+
+    def reset_buffers(self) -> None:
+        """Fresh zero buffers.  After a dispatch raises mid-flight the
+        donated inputs may already be consumed — the old buffers can
+        never be trusted again, so containment always re-arms here."""
+        import jax.numpy as jnp
+        self.buffers = [jnp.zeros(t.shape, np.dtype(t.dtype))
+                        for t in self.types]
+
+    def rebuild(self) -> None:
+        """Reset to the empty state, reconciling the counters (frees
+        catch up to allocs: every outstanding slot is forcibly returned).
+        The containment path's last resort when :meth:`verify` reports
+        damage."""
+        self._free = list(range(self.slots - 1, -1, -1))
+        self.frees = self.allocs
+        self.reset_buffers()
 
     def stats(self) -> PoolStats:
         return PoolStats(
@@ -458,6 +510,55 @@ class PagedKVPool:
         assert len(new_buffers) == len(self.buffers)
         self.buffers = list(new_buffers)
 
+    def verify(self) -> List[str]:
+        """Accounting invariants; [] = consistent.  The containment path
+        runs this after failing the in-flight requests — the exact page
+        bookkeeping is what the cancellation contract promises."""
+        problems = []
+        held = sum(len(p) for p in self._slot_pages)
+        if held != self.pages_in_use:
+            problems.append(f"slot page lists hold {held} pages but "
+                            f"pages_in_use says {self.pages_in_use}")
+        if self.page_allocs - self.page_frees != self.pages_in_use:
+            problems.append(
+                f"page_allocs({self.page_allocs}) - "
+                f"page_frees({self.page_frees}) != "
+                f"pages_in_use({self.pages_in_use})")
+        if self.allocs - self.frees != self.active:
+            problems.append(f"allocs({self.allocs}) - frees({self.frees}) "
+                            f"!= active({self.active})")
+        pages = [pid for p in self._slot_pages for pid in p] \
+            + list(self._free_pages)
+        if sorted(pages) != list(range(1, self.n_pages)):
+            problems.append("free list + slot pages do not partition the "
+                            "physical pages (lost or duplicated page)")
+        for slot in self._free_slots:
+            if 0 <= slot < self.slots and self.page_table[slot].any():
+                problems.append(f"free slot {slot} still maps pages in "
+                                f"the page table")
+        return problems
+
+    def reset_buffers(self) -> None:
+        """Fresh zero buffers (see :meth:`KVCachePool.reset_buffers`:
+        a raised dispatch may have consumed the donated inputs)."""
+        import jax.numpy as jnp
+        self.buffers = [jnp.zeros(t.shape, np.dtype(t.dtype))
+                        for t in self.types]
+
+    def rebuild(self) -> None:
+        """Reset to the empty state, reconciling counters (frees/
+        page_frees catch up so the leak gates still balance) — the
+        containment last resort when :meth:`verify` reports damage."""
+        self._free_slots = list(range(self.slots - 1, -1, -1))
+        self._free_pages = list(range(self.n_pages - 1, 0, -1))
+        self._slot_pages = [[] for _ in range(self.slots)]
+        self._used_tokens = [0] * self.slots
+        self._reserved = [0] * self.slots
+        self.page_table = np.zeros((self.slots, self.max_pages), np.int32)
+        self.frees = self.allocs
+        self.page_frees = self.page_allocs
+        self.reset_buffers()
+
     def stats(self) -> PagedPoolStats:
         used = sum(self._used_tokens)
         cap = self.pages_in_use * self.page_size
@@ -500,6 +601,13 @@ class EngineReport:
     # over decode dispatches (continuous + paged modes) — the memory
     # metric the paged pool exists to shrink
     kv_bytes_per_active_token: Optional[float] = None
+    # fault tolerance (PR 8): per-request terminal status + structured
+    # error, the engine's health state, and the lifecycle counters —
+    # cancellation/deadline/step-failure must each be observable here
+    statuses: Dict[int, str] = dataclasses.field(default_factory=dict)
+    errors: Dict[int, str] = dataclasses.field(default_factory=dict)
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    health: str = "ok"
 
 
 class ServeEngine:
@@ -517,7 +625,8 @@ class ServeEngine:
                  page_size: Optional[int] = None,
                  chunk_steps: Optional[int] = None,
                  pages: Optional[int] = None,
-                 device: Optional[object] = None):
+                 device: Optional[object] = None,
+                 faults: Optional[FaultInjector] = None):
         """Every graph the engine compiles (serve/decode step, per-length
         prefills, fused donated chunks) goes through ``options`` — so
         ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
@@ -643,6 +752,14 @@ class ServeEngine:
         self._requests: Dict[int, Request] = {}
         self._queue: List[int] = []
         self._next_rid = 0
+        # fault tolerance (PR 8): injector (process-global by default,
+        # tests pass their own), health state, lifecycle counters, and
+        # the terminal-event feed a front door drains after each step
+        self.faults = faults if faults is not None else get_injector()
+        self.health = "ok"
+        self.counters: Dict[str, int] = dict.fromkeys(
+            TERMINAL_STATUSES + ("engine_errors",), 0)
+        self._events: List[Tuple[int, str, Optional[str]]] = []
         self._steps = 0
         self.step_seconds: List[float] = []   # decode dispatch durations
         self.lat_ms: List[float] = []         # per-token latency samples
@@ -661,7 +778,8 @@ class ServeEngine:
     # -- request intake ------------------------------------------------------
     def check_request(self, prompt_len: int, max_new: int, *,
                       temperature: float = 0.0, top_k: int = 0,
-                      key: int = 0) -> None:
+                      key: int = 0,
+                      deadline_s: Optional[float] = None) -> None:
         """Validate request parameters without queueing anything; raises
         ``ValueError`` on the first violation.  Factored out of
         :meth:`submit` so a front door can turn a bad request body into
@@ -698,6 +816,9 @@ class ServeEngine:
             raise ValueError(
                 f"stochastic sampling (temperature/top_k/key) needs "
                 f"mode='paged'; mode {self.mode!r} decodes greedily")
+        if deadline_s is not None and not deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be > 0 seconds, got {deadline_s}")
 
     @property
     def queue_depth(self) -> int:
@@ -714,6 +835,10 @@ class ServeEngine:
         if self.mode not in ("continuous", "paged"):
             raise RuntimeError(
                 "can_admit() is only available in continuous/paged modes")
+        if self.health == "halted":
+            return False
+        if self.faults.fire("admit.reject"):
+            return False
         queued = [self._requests[r] for r in self._queue]
         if self.mode == "continuous":
             return self.pool.slots - self.pool.active - len(queued) >= 1
@@ -733,6 +858,8 @@ class ServeEngine:
             "active_slots": self.pool.active if self.pool is not None
             else 0,
             "steps": self._steps,
+            "health": self.health,
+            "counters": dict(self.counters),
         }
         if self.mode == "paged":
             d["pages_in_use"] = self.pool.pages_in_use
@@ -740,23 +867,139 @@ class ServeEngine:
         return d
 
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
-               top_k: int = 0, key: int = 0) -> int:
+               top_k: int = 0, key: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a request.  ``temperature``/``top_k``/``key`` are per-row
         sampling inputs of the paged graph (temperature 0 = greedy, the
         default and the cross-mode parity baseline; top_k 0 = full
         vocabulary; ``key`` seeds the request's PRNG stream — same key,
-        same tokens)."""
+        same tokens).  ``deadline_s`` bounds the request's total time in
+        the engine (queue wait included): past it, the scheduler retires
+        the request with status ``deadline_exceeded`` at the next
+        step/chunk boundary, keeping any tokens already generated."""
+        if self.health == "halted":
+            raise RuntimeError(
+                "engine is halted after an unrecoverable step failure; "
+                "build a fresh engine to serve again")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         self.check_request(len(prompt), max_new, temperature=temperature,
-                           top_k=top_k, key=key)
+                           top_k=top_k, key=key, deadline_s=deadline_s)
         rid = self._next_rid
         self._next_rid += 1
-        self._requests[rid] = Request(rid, prompt, int(max_new),
-                                      t_submit=time.perf_counter(),
-                                      temperature=float(temperature),
-                                      top_k=int(top_k), key=int(key))
+        now = time.perf_counter()
+        self._requests[rid] = Request(
+            rid, prompt, int(max_new), t_submit=now,
+            temperature=float(temperature), top_k=int(top_k), key=int(key),
+            deadline=(now + float(deadline_s)
+                      if deadline_s is not None else None))
         self._queue.append(rid)
         return rid
+
+    # -- request lifecycle (PR 8) --------------------------------------------
+    def cancel(self, rid: int, reason: str = "cancelled by caller") -> bool:
+        """Retire request ``rid``: immediately while it is still queued,
+        else at the next step/chunk boundary (continuous/paged modes —
+        the only points where a slot can be returned safely).  Its slot
+        and KV pages verifiably go back to the pool and any tokens
+        already generated are kept.  Returns False when the request had
+        already reached a terminal status (nothing to do); raises
+        ``KeyError`` for an unknown rid.
+
+        lockstep/donated admit their whole batch inside :meth:`run`, so
+        cancellation there reaches only still-queued requests."""
+        req = self._requests.get(rid)
+        if req is None:
+            raise KeyError(f"unknown request id {rid}")
+        if req.finished:
+            return False
+        req.cancel_reason = reason
+        if rid in self._queue:      # never admitted: no slot to return
+            self._queue.remove(rid)
+            self._retire(req, "cancelled", error=reason)
+            return True
+        if self.mode in ("continuous", "paged"):
+            return True             # active: reaped at the next boundary
+        return False                # lockstep/donated mid-run: too late
+
+    def drain_events(self) -> List[Tuple[int, str, Optional[str]]]:
+        """Terminal events ``(rid, status, error)`` since the last call —
+        how a front door learns a request ended (and why) without
+        polling every Request object."""
+        events, self._events = self._events, []
+        return events
+
+    def _retire(self, req: Request, status: str,
+                error: Optional[str] = None) -> None:
+        """The single terminal transition: set the status, free the
+        slot/pages, count it, and emit the terminal event."""
+        req.status = status
+        req.error = error
+        req.t_done = time.perf_counter()
+        if req.slot is not None:
+            self._slot_req[req.slot] = None
+            self.pool.free(req.slot)
+            req.slot = None
+        self.counters[status] += 1
+        self._events.append((req.rid, status, error))
+
+    def _reap(self) -> None:
+        """Step/chunk-boundary sweep: honour cancellations and expired
+        deadlines for queued and active requests before admitting or
+        dispatching anything."""
+        now = time.perf_counter()
+        for rid in list(self._queue):
+            req = self._requests[rid]
+            if req.cancel_reason is not None:
+                self._queue.remove(rid)
+                self._retire(req, "cancelled", error=req.cancel_reason)
+            elif req.deadline is not None and now >= req.deadline:
+                self._queue.remove(rid)
+                self._retire(req, "deadline_exceeded",
+                             error="deadline expired before admission")
+        for rid in list(self._slot_req):
+            if rid is None:
+                continue
+            req = self._requests[rid]
+            if req.cancel_reason is not None:
+                self._retire(req, "cancelled", error=req.cancel_reason)
+            elif req.deadline is not None and now >= req.deadline:
+                self._retire(req, "deadline_exceeded",
+                             error=f"deadline expired after "
+                                   f"{len(req.tokens)} tokens")
+
+    def _contain_step_failure(self, exc: BaseException) -> None:
+        """A dispatch raised: fail every in-flight request with a
+        structured error, then verify the pool's accounting — keeping it
+        (fresh buffers; donation may have consumed the old ones) when
+        consistent, rebuilding it wholesale when not — and drop to
+        ``degraded`` health.  If even that fails, ``halted``: submit and
+        step refuse until the engine is replaced."""
+        self.counters["engine_errors"] += 1
+        msg = f"dispatch failed: {type(exc).__name__}: {exc}"
+        damage = False
+        for slot, rid in enumerate(self._slot_req):
+            if rid is None:
+                continue
+            req = self._requests[rid]
+            req.slot = None             # freed below, or swept by rebuild
+            self._slot_req[slot] = None
+            try:
+                self.pool.free(slot)
+            except Exception:
+                damage = True
+            self._retire(req, "failed", error=msg)
+        try:
+            problems = self.pool.verify()
+        except Exception as verr:
+            problems = [f"verify raised: {verr}"]
+        try:
+            if damage or problems:
+                self.pool.rebuild()
+            else:
+                self.pool.reset_buffers()
+            self.health = "degraded"
+        except Exception:
+            self.health = "halted"
 
     # -- prefill -------------------------------------------------------------
     def _prefill_for(self, P: int, batch: int):
@@ -818,6 +1061,7 @@ class ServeEngine:
             self.pool.write_prefix(slot, name, outs[1 + i])
         req.slot = slot
         req.pos = P
+        req.status = "active"
         req.tokens = [first]
         # the first token exists the moment prefill returns: admission
         # and first-token are the same instant on this scheduler
@@ -831,20 +1075,22 @@ class ServeEngine:
         return first
 
     def _finish(self, req: Request) -> None:
-        req.t_done = time.perf_counter()
-        if req.slot is not None:
-            self._slot_req[req.slot] = None
-            self.pool.free(req.slot)
-            req.slot = None
+        self._retire(req, "completed")
 
     def step(self) -> List[Tuple[int, int]]:
         """One engine step: admit what fits, then one batched decode
         dispatch (one token per row in continuous mode, ``chunk_steps``
-        tokens per row in paged mode).
+        tokens per row in paged mode).  Cancellations and expired
+        deadlines are honoured first — the step boundary is the only
+        point a slot can be returned safely.
 
         Returns the ``(rid, token)`` pairs emitted.  Only available in
         continuous/paged modes — lockstep/donated run whole workloads via
         :meth:`run`."""
+        if self.health == "halted":
+            raise RuntimeError(
+                "engine is halted after an unrecoverable step failure; "
+                "build a fresh engine to serve again")
         if self.mode == "paged":
             return self._step_paged()
         if self.mode != "continuous":
@@ -852,6 +1098,7 @@ class ServeEngine:
                 "step() is only available in continuous/paged modes")
         if self._t0_work is None:
             self._t0_work = time.perf_counter()
+        self._reap()
         emitted: List[Tuple[int, int]] = []
         while self._queue and self.pool.has_free:
             req = self._requests[self._queue.pop(0)]
@@ -868,11 +1115,18 @@ class ServeEngine:
         self._kv_sample(len(active) * self.pool.bytes_per_slot,
                         sum(r.pos for _, r in active))
         t0 = time.perf_counter()
-        outs = self.cf.raw(self._tok, self._pos, *self.pool.buffers,
-                           *self.jparams)
-        sample = np.asarray(outs[0])
-        self.pool.update([self.pool.buffers[k] if j is None else outs[1 + j]
-                          for k, j in enumerate(self._recycle)])
+        try:
+            self.faults.delay("dispatch.delay")
+            self.faults.check("dispatch.raise")
+            outs = self.cf.raw(self._tok, self._pos, *self.pool.buffers,
+                               *self.jparams)
+            sample = np.asarray(outs[0])
+            self.pool.update([self.pool.buffers[k] if j is None
+                              else outs[1 + j]
+                              for k, j in enumerate(self._recycle)])
+        except Exception as exc:
+            self._contain_step_failure(exc)
+            return emitted
         dt = time.perf_counter() - t0
         self._steps += 1
         self.step_seconds.append(dt)
@@ -896,6 +1150,7 @@ class ServeEngine:
         writes, then one fused ``chunk_steps``-token dispatch."""
         if self._t0_work is None:
             self._t0_work = time.perf_counter()
+        self._reap()
         K = self.chunk_steps
         emitted: List[Tuple[int, int]] = []
         while self._queue:
@@ -940,12 +1195,19 @@ class ServeEngine:
                         sum(r.pos for _, r in active))
         self.pool.sample_fragmentation()
         t0 = time.perf_counter()
-        outs = self.cf.raw(self._tok, self._pos, self.pool.page_table,
-                           self._temp, self._topk, self._key,
-                           *self.pool.buffers, *self.jparams)
-        toks = np.asarray(outs[0])  # (chunk_steps, B, 1) — syncs the chain
-        self.pool.update([self.pool.buffers[k] if j is None else outs[1 + j]
-                          for k, j in enumerate(self._recycle)])
+        try:
+            self.faults.delay("dispatch.delay")
+            self.faults.check("dispatch.raise")
+            outs = self.cf.raw(self._tok, self._pos, self.pool.page_table,
+                               self._temp, self._topk, self._key,
+                               *self.pool.buffers, *self.jparams)
+            toks = np.asarray(outs[0])  # (K, B, 1) — syncs the chain
+            self.pool.update([self.pool.buffers[k] if j is None
+                              else outs[1 + j]
+                              for k, j in enumerate(self._recycle)])
+        except Exception as exc:
+            self._contain_step_failure(exc)
+            return emitted
         dt = time.perf_counter() - t0
         self._steps += 1
         self.step_seconds.append(dt)
@@ -1007,34 +1269,49 @@ class ServeEngine:
         prompts = np.zeros((B, P), np.int32)
         for i, r in enumerate(reqs):
             prompts[i] = r.prompt
-        g, cf, pvals = self._prefill_for(P, B)
-        pin = self._prefill_inputs(g, prompts)
-        t0 = time.perf_counter()
-        if self.mode == "lockstep":
-            outs = cf(*pin, *pvals)
-        else:
-            outs = cf.raw(*pin, *pvals)
-        logits = np.asarray(outs[0]).reshape(B, -1)
-        tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
-        t_first = time.perf_counter()
-        for i, r in enumerate(reqs):
-            r.pos = P
-            r.tokens = [int(tok[i, 0])]
-            r.t_admit = r.t_first = t_first
-        # decode caches: zero-filled, prefill prefix copied in by *name*
-        # (ModelGraphs.aux["cache_names"] — prefill output i is the decode
-        # input named cache_names[i]; no shape-matching heuristics)
-        caches = self._init_caches(g, outs[1:])
-        self.prefill_seconds += time.perf_counter() - t0
-        n_steps = max(r.max_new for r in reqs) - 1
-        if n_steps <= 0:
+            r.status = "active"
+        try:
+            self.faults.delay("dispatch.delay")
+            self.faults.check("dispatch.raise")
+            g, cf, pvals = self._prefill_for(P, B)
+            pin = self._prefill_inputs(g, prompts)
+            t0 = time.perf_counter()
+            if self.mode == "lockstep":
+                outs = cf(*pin, *pvals)
+            else:
+                outs = cf.raw(*pin, *pvals)
+            logits = np.asarray(outs[0]).reshape(B, -1)
+            tok = np.argmax(logits, axis=-1).astype(np.int32).reshape(B, 1)
+            t_first = time.perf_counter()
+            for i, r in enumerate(reqs):
+                r.pos = P
+                r.tokens = [int(tok[i, 0])]
+                r.t_admit = r.t_first = t_first
+            # decode caches: zero-filled, prefill prefix copied in by
+            # *name* (ModelGraphs.aux["cache_names"] — prefill output i is
+            # the decode input named cache_names[i]; no shape-matching
+            # heuristics)
+            caches = self._init_caches(g, outs[1:])
+            self.prefill_seconds += time.perf_counter() - t0
+            n_steps = max(r.max_new for r in reqs) - 1
+            if n_steps <= 0:
+                for r in reqs:
+                    self._retire(r, "completed")
+                return
+            if self.mode == "donated":
+                self._decode_donated(reqs, tok, P, caches, n_steps)
+            else:
+                self._decode_lockstep(reqs, tok, P, caches, n_steps)
+        except Exception as exc:
+            # same containment contract as step(): the batch fails with a
+            # structured error, the engine stays alive (no pool to verify
+            # in these modes — caches are per-run locals)
+            self.counters["engine_errors"] += 1
+            msg = f"dispatch failed: {type(exc).__name__}: {exc}"
             for r in reqs:
-                r.t_done = time.perf_counter()
-            return
-        if self.mode == "donated":
-            self._decode_donated(reqs, tok, P, caches, n_steps)
-        else:
-            self._decode_lockstep(reqs, tok, P, caches, n_steps)
+                if not r.finished:
+                    self._retire(r, "failed", error=msg)
+            self.health = "degraded"
 
     def _decode_lockstep(self, reqs, tok, P, caches, n_steps) -> None:
         """The legacy hot loop: numpy round trip every step."""
@@ -1054,8 +1331,8 @@ class ServeEngine:
                     r.tokens.append(int(tok[i, 0]))
                     r.pos += 1
                     emitted += 1
-                if r.done and r.t_done is None:
-                    r.t_done = time.perf_counter()
+                if r.done and not r.finished:
+                    self._retire(r, "completed")
             self._steps += 1
             self.step_seconds.append(dt)
             self._decode_tokens += emitted
@@ -1082,7 +1359,7 @@ class ServeEngine:
             take = min(r.max_new - 1, n_steps)
             r.tokens.extend(int(t) for t in toks[:take, i, 0])
             r.pos += take
-            r.t_done = time.perf_counter()
+            self._retire(r, "completed")
             self._decode_tokens += take
             self.lat_ms.extend([dt * 1e3] * take)
 
@@ -1124,7 +1401,14 @@ class ServeEngine:
         a ``stream()``-then-``run()`` sequence reports the full span."""
         if self._t0_work is None:
             self._t0_work = time.perf_counter()
-        if self.mode in ("continuous", "paged"):
+        if self.health == "halted":
+            # nothing can be dispatched; fail what is still queued so the
+            # report accounts for every submitted request
+            for rid in list(self._queue):
+                self._retire(self._requests[rid], "failed",
+                             error="engine halted")
+            self._queue = []
+        elif self.mode in ("continuous", "paged"):
             for _ in self.stream():
                 pass
         else:
@@ -1149,4 +1433,8 @@ class ServeEngine:
             ttft_p95_ms=_percentile(ttft, 95),
             kv_bytes_per_active_token=(
                 self._kv_byte_steps / self._kv_token_steps
-                if self._kv_token_steps else None))
+                if self._kv_token_steps else None),
+            statuses={rid: r.status for rid, r in self._requests.items()},
+            errors={rid: r.error for rid, r in self._requests.items()
+                    if r.error is not None},
+            counters=dict(self.counters), health=self.health)

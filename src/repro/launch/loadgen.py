@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .engine import _percentile
+from .faults import get_injector
 
 
 def make_prompts(n: int, prompt_len: int, vocab: int,
@@ -117,11 +118,19 @@ class StreamResult:
     ttft_ms: Optional[float]     # request write -> first token event
     gaps_ms: List[float]         # inter-token event spacing
     error: Optional[str] = None
+    terminal: str = "completed"  # request's terminal status (done event)
+    disconnected: bool = False   # we hung up early (disconnect_after)
 
 
 async def stream_generate(base_url: str, payload: dict,
-                          timeout: float = 600.0) -> StreamResult:
-    """POST /v1/generate and consume the SSE stream to completion."""
+                          timeout: float = 600.0,
+                          disconnect_after: Optional[int] = None
+                          ) -> StreamResult:
+    """POST /v1/generate and consume the SSE stream to completion.
+
+    ``disconnect_after=n`` hangs up (closes the socket mid-stream) after
+    the n-th token event — the misbehaving-client harness: the server is
+    expected to cancel the request so it stops holding slot/pages."""
     host, port = _split(base_url)
     reader, writer = await asyncio.open_connection(host, port)
     try:
@@ -148,8 +157,10 @@ async def stream_generate(base_url: str, payload: dict,
         t_last = None
         final: Optional[List[int]] = None
         error = None
+        terminal = "completed"
+        disconnected = False
         buf = b""
-        while True:
+        while not disconnected:
             line = await asyncio.wait_for(reader.readline(), timeout)
             size = int(line.strip() or b"0", 16)
             if size == 0:
@@ -157,7 +168,8 @@ async def stream_generate(base_url: str, payload: dict,
             buf += await reader.readexactly(size)
             await reader.readexactly(2)  # chunk CRLF
             # SSE events may span chunk boundaries; split on the blank
-            # line and keep the unterminated tail buffered
+            # line and keep the unterminated tail buffered (bare
+            # ": heartbeat" comment events carry no data: line)
             while b"\n\n" in buf:
                 event, buf = buf.split(b"\n\n", 1)
                 for ln in event.decode().splitlines():
@@ -172,15 +184,24 @@ async def stream_generate(base_url: str, payload: dict,
                             gaps.append((now - t_last) * 1e3)
                         t_last = now
                         tokens.append(int(ev["token"]))
+                        if disconnect_after is not None \
+                                and len(tokens) >= disconnect_after:
+                            disconnected = True
                     elif ev.get("done"):
                         final = [int(t) for t in ev["tokens"]]
+                        terminal = str(ev.get("status", "completed"))
+                        if "error" in ev:
+                            error = str(ev["error"])
                     elif "error" in ev:
                         error = str(ev["error"])
-        if final is not None and final != tokens:
+                if disconnected:
+                    break
+        if not disconnected and final is not None and final != tokens:
             error = error or (f"final token list disagrees with the "
                               f"stream ({len(final)} vs {len(tokens)})")
         return StreamResult(status, final if final is not None else tokens,
-                            ttft, gaps, error=error)
+                            ttft, gaps, error=error, terminal=terminal,
+                            disconnected=disconnected)
     finally:
         writer.close()
         try:
@@ -202,6 +223,8 @@ class LoadResult:
     ttft_p95_ms: float
     gap_p50_ms: float
     gap_p95_ms: float
+    terminals: Dict[str, int] = dataclasses.field(default_factory=dict)
+    disconnects: int = 0
 
     @property
     def tok_s(self) -> float:
@@ -211,20 +234,37 @@ class LoadResult:
 async def run_load_async(base_url: str, prompts: List, gen: int, *,
                          temperature: float = 0.0, top_k: int = 0,
                          concurrency: Optional[int] = None,
-                         timeout: float = 600.0) -> LoadResult:
+                         timeout: float = 600.0,
+                         disconnect_after: Optional[int] = None,
+                         request_timeout: Optional[float] = None
+                         ) -> LoadResult:
     """Fire one streaming client per prompt (client ``i`` tagged ``i``),
-    all concurrent (bounded by ``concurrency`` when given)."""
+    all concurrent (bounded by ``concurrency`` when given).
+
+    ``disconnect_after`` makes every client hang up after that many
+    tokens; the ``client.disconnect_after_n`` fault site does the same
+    selectively (its rule picks which clients, its payload says after
+    how many tokens).  Disconnected clients are excluded from the
+    parity ``results`` map — their streams are intentionally partial."""
     sem = asyncio.Semaphore(concurrency) if concurrency else None
+    inj = get_injector()
 
     async def one(i: int, prompt) -> StreamResult:
         payload = {"prompt": [int(t) for t in prompt], "max_new": int(gen),
                    "tag": i}
         if temperature or top_k:
             payload.update(temperature=temperature, top_k=top_k, key=i)
+        if request_timeout is not None:
+            payload["timeout"] = request_timeout
+        da = disconnect_after
+        if da is None and inj.fire("client.disconnect_after_n"):
+            da = max(int(inj.value("client.disconnect_after_n", 1)), 1)
         if sem is None:
-            return await stream_generate(base_url, payload, timeout)
+            return await stream_generate(base_url, payload, timeout,
+                                         disconnect_after=da)
         async with sem:
-            return await stream_generate(base_url, payload, timeout)
+            return await stream_generate(base_url, payload, timeout,
+                                         disconnect_after=da)
 
     t0 = time.perf_counter()
     outs = await asyncio.gather(*(one(i, p) for i, p in enumerate(prompts)))
@@ -234,11 +274,18 @@ async def run_load_async(base_url: str, prompts: List, gen: int, *,
     errors: List[str] = []
     ttft: List[float] = []
     gaps: List[float] = []
+    terminals: Dict[str, int] = {}
+    disconnects = 0
     for i, r in enumerate(outs):
         statuses[r.status] = statuses.get(r.status, 0) + 1
-        if r.error:
+        if r.status == 200:
+            terminals[r.terminal] = terminals.get(r.terminal, 0) + 1
+        if r.disconnected:
+            disconnects += 1
+        elif r.error:
             errors.append(f"client {i}: {r.error}")
-        if r.status == 200 and not r.error:
+        if r.status == 200 and not r.error and not r.disconnected \
+                and r.terminal == "completed":
             results[str(i)] = r.tokens
         if r.ttft_ms is not None:
             ttft.append(r.ttft_ms)
@@ -247,7 +294,8 @@ async def run_load_async(base_url: str, prompts: List, gen: int, *,
         results=results, statuses=statuses, errors=errors, wall_s=wall,
         total_tokens=sum(len(v) for v in results.values()),
         ttft_p50_ms=_percentile(ttft, 50), ttft_p95_ms=_percentile(ttft, 95),
-        gap_p50_ms=_percentile(gaps, 50), gap_p95_ms=_percentile(gaps, 95))
+        gap_p50_ms=_percentile(gaps, 50), gap_p95_ms=_percentile(gaps, 95),
+        terminals=terminals, disconnects=disconnects)
 
 
 def run_load(base_url: str, prompts: List, gen: int, **kw) -> LoadResult:

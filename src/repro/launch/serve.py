@@ -94,7 +94,22 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--device", default=None,
                     help="pin the engine to one accelerator, e.g. 'cpu:0' "
                          "(jax device placement)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault-injection spec, e.g. "
+                         "'dispatch.raise=after:3,admit.reject=prob:0.2' "
+                         "(see repro.launch.faults; also $REPRO_FAULTS)")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="seed for probabilistic fault rules")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    help="per-request deadline in seconds (synthetic "
+                         "workload: passed as deadline_s to every submit)")
+    ap.add_argument("--max-body-bytes", type=int, default=1 << 20,
+                    help="--serve-http: request bodies beyond this get 413")
     args = ap.parse_args(argv)
+
+    if args.faults is not None:
+        from .faults import configure
+        configure(args.faults, args.faults_seed)
 
     from ..backend import CompileOptions
     from ..configs import get_config
@@ -150,6 +165,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         sampling = dict(temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(args.seed)
     rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G,
+                          deadline_s=args.request_timeout,
                           **(dict(sampling, key=i) if sampling else {}))
             for i in range(n_req)]
     rep = engine.run()
@@ -244,7 +260,8 @@ def _serve_http(engine, args, cfg, mode, max_len) -> int:
     from .server import ServeHTTPServer
 
     srv = ServeHTTPServer(engine, host=args.host, port=args.port,
-                          max_wait_queue=args.max_wait_queue)
+                          max_wait_queue=args.max_wait_queue,
+                          max_body_bytes=args.max_body_bytes)
     srv.serve_forever(on_ready=lambda: print(
         f"[serve-http:{mode}] {cfg.name} listening on {srv.base_url} "
         f"(slots={args.batch} max_len={max_len} "

@@ -51,8 +51,9 @@ import numpy as np
 from .engine import ServeEngine, _percentile
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            405: "Method Not Allowed", 429: "Too Many Requests",
-            500: "Internal Server Error", 503: "Service Unavailable"}
+            405: "Method Not Allowed", 413: "Payload Too Large",
+            429: "Too Many Requests", 500: "Internal Server Error",
+            503: "Service Unavailable"}
 
 
 class ServerStats:
@@ -73,7 +74,10 @@ class ServerStats:
         self.completed = 0
         self.rejected_429 = 0
         self.rejected_503 = 0
+        self.rejected_413 = 0
         self.tokens_streamed = 0
+        self.client_disconnects = 0
+        self.forced_closes = 0
 
     def on_accept(self) -> None:
         with self._lock:
@@ -83,8 +87,18 @@ class ServerStats:
         with self._lock:
             if status == 429:
                 self.rejected_429 += 1
+            elif status == 413:
+                self.rejected_413 += 1
             else:
                 self.rejected_503 += 1
+
+    def on_client_disconnect(self) -> None:
+        with self._lock:
+            self.client_disconnects += 1
+
+    def on_forced_close(self, n: int = 1) -> None:
+        with self._lock:
+            self.forced_closes += int(n)
 
     def on_token(self, gap_ms: Optional[float], first: bool,
                  ttft_ms: Optional[float] = None) -> None:
@@ -114,7 +128,10 @@ class ServerStats:
                 "requests_completed": self.completed,
                 "rejected_429": self.rejected_429,
                 "rejected_503": self.rejected_503,
+                "rejected_413": self.rejected_413,
                 "tokens_streamed": self.tokens_streamed,
+                "client_disconnects": self.client_disconnects,
+                "forced_closes": self.forced_closes,
                 "ttft_p50_ms": _percentile(list(self._ttft_ms), 50),
                 "ttft_p95_ms": _percentile(list(self._ttft_ms), 95),
                 "tok_p50_ms": _percentile(list(self._gap_ms), 50),
@@ -139,6 +156,9 @@ class _Stream:
     t_accept: float
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_last: Optional[float] = None
+    deadline_s: Optional[float] = None  # client 'timeout' knob (seconds)
+    rid: Optional[int] = None           # set by the engine thread at submit
+    cancelled: bool = False             # client gone; cancel at/after submit
 
 
 class ServeHTTPServer:
@@ -151,7 +171,8 @@ class ServeHTTPServer:
     there is room, else is bounced with 429."""
 
     def __init__(self, engine: ServeEngine, *, host: str = "127.0.0.1",
-                 port: int = 0, max_wait_queue: int = 8):
+                 port: int = 0, max_wait_queue: int = 8,
+                 max_body_bytes: int = 1 << 20, heartbeat_s: float = 10.0):
         if engine.mode not in ("continuous", "paged"):
             raise ValueError(
                 f"the HTTP server needs a step()-capable engine "
@@ -159,16 +180,24 @@ class ServeHTTPServer:
         if max_wait_queue < 0:
             raise ValueError(
                 f"max_wait_queue must be >= 0, got {max_wait_queue}")
+        if max_body_bytes < 1:
+            raise ValueError(
+                f"max_body_bytes must be >= 1, got {max_body_bytes}")
+        if not heartbeat_s > 0:
+            raise ValueError(f"heartbeat_s must be > 0, got {heartbeat_s}")
         self.engine = engine
         self.host = host
         self.port = int(port)
         self.max_wait_queue = int(max_wait_queue)
+        self.max_body_bytes = int(max_body_bytes)
+        self.heartbeat_s = float(heartbeat_s)
         self.stats = ServerStats()
 
-        # engine-thread state: _cv guards _pending/_draining; _live is
-        # touched only by the engine thread after submission
+        # engine-thread state: _cv guards _pending/_cancels/_draining;
+        # _live is touched only by the engine thread after submission
         self._cv = threading.Condition()
         self._pending: Deque[_Stream] = collections.deque()
+        self._cancels: Deque[int] = collections.deque()
         self._draining = False
         self._live: Dict[int, _Stream] = {}
         self._results: Dict[str, List[int]] = {}
@@ -211,10 +240,19 @@ class ServeHTTPServer:
         if self._server is not None:
             self._server.close()
         # every stream already holds its terminal event; wait for the
-        # connection handlers to flush it down the wire
+        # connection handlers to flush it down the wire — and force-close
+        # whatever survives the timeout instead of abandoning it silently
+        # (an abandoned handler would hold its socket open forever and
+        # the drain would still have claimed success)
         conns = [t for t in self._conns if not t.done()]
         if conns:
-            await asyncio.wait(conns, timeout=30)
+            _, alive = await asyncio.wait(conns, timeout=30)
+            if alive:
+                for t in alive:
+                    t.cancel()
+                await asyncio.gather(*alive, return_exceptions=True)
+                self.stats.on_forced_close(len(alive))
+                self.drain_ok = False
         if self._server is not None:
             await self._server.wait_closed()
 
@@ -269,22 +307,41 @@ class ServeHTTPServer:
         try:
             while True:
                 with self._cv:
-                    while not self._pending and not self._engine_busy() \
+                    while not self._pending and not self._cancels \
+                            and not self._engine_busy() \
                             and not self._draining:
                         self._cv.wait()
                     if self._draining and not self._pending \
+                            and not self._cancels \
                             and not self._engine_busy():
                         break
                     batch = list(self._pending)
                     self._pending.clear()
+                    cancels = list(self._cancels)
+                    self._cancels.clear()
+                for rid in cancels:
+                    eng.cancel(rid, "client disconnected")
                 for item in batch:
+                    deadline = item.deadline_s
+                    if deadline is not None:
+                        # the knob bounds the whole request, so charge
+                        # the time it already waited for this thread
+                        deadline = max(
+                            deadline - (time.perf_counter() - item.t_accept),
+                            1e-3)
                     rid = eng.submit(item.prompt, item.max_new,
                                      temperature=item.temperature,
-                                     top_k=item.top_k, key=item.key)
+                                     top_k=item.top_k, key=item.key,
+                                     deadline_s=deadline)
+                    item.rid = rid
                     self._live[rid] = item
+                    if item.cancelled:  # client left before submission
+                        eng.cancel(rid, "client disconnected")
                 if self._engine_busy():
                     for rid, tok in eng.step():
                         self._emit(rid, tok)
+                for rid, status, error in eng.drain_events():
+                    self._on_terminal(rid, status, error)
         except BaseException as exc:  # fail loudly into every open stream
             self._engine_error = exc
             with self._cv:
@@ -310,12 +367,38 @@ class ServeHTTPServer:
         item.t_last = now
         item.tokens.append(int(tok))
         self._push(item, ("tok", int(tok)))
-        if len(item.tokens) >= item.max_new:
+
+    def _on_terminal(self, rid: int, status: str,
+                     error: Optional[str]) -> None:
+        """A drained engine terminal event: close out the stream with the
+        request's terminal status (``completed`` keeps the legacy
+        ``done`` event; everything else ends with status + error)."""
+        item = self._live.pop(rid, None)
+        if item is None:
+            return
+        if status == "completed":
             key = item.tag if item.tag is not None else str(rid)
             self._results[key] = list(item.tokens)
             self._push(item, ("done", list(item.tokens)))
-            del self._live[rid]
             self.stats.on_complete()
+        else:
+            self._push(item, ("end", {"status": status, "error": error,
+                                      "tokens": list(item.tokens)}))
+
+    def _request_cancel(self, item: _Stream) -> None:
+        """Asyncio side: the client went away (or errored) mid-stream —
+        route a cancel to the engine thread so the request stops holding
+        slot/pages.  Safe against the accept->submit race: ``cancelled``
+        is set before reading ``rid``, and the engine thread assigns
+        ``rid`` before checking ``cancelled``."""
+        with self._cv:
+            item.cancelled = True
+            if item in self._pending:    # never reached the engine
+                self._pending.remove(item)
+                return
+            if item.rid is not None:
+                self._cancels.append(item.rid)
+                self._cv.notify_all()
 
     def _push(self, item: _Stream, msg) -> None:
         try:
@@ -351,6 +434,7 @@ class ServeHTTPServer:
                           for k, v in self._results.items()}
         doc["server"] = self.stats.snapshot()
         doc["drain_ok"] = bool(self.drain_ok)
+        doc["health"] = self.engine.health
         if self._engine_error is not None:
             doc["engine_error"] = str(self._engine_error)
         return doc
@@ -379,9 +463,25 @@ class ServeHTTPServer:
                     k, v = ln.split(":", 1)
                     headers[k.strip().lower()] = v.strip()
             n = int(headers.get("content-length", 0) or 0)
+            if n > self.max_body_bytes:
+                # drain the oversized body in bounded chunks first, so
+                # the rejection isn't clobbered by a TCP reset from
+                # closing a socket with unread data
+                left = n
+                while left > 0:
+                    chunk = await reader.read(min(left, 1 << 16))
+                    if not chunk:
+                        break
+                    left -= len(chunk)
+                self.stats.on_reject(413)
+                writer.write(self._resp(413, {
+                    "error": f"body of {n} bytes exceeds "
+                             f"max_body_bytes={self.max_body_bytes}"}))
+                await writer.drain()
+                return
             body = await reader.readexactly(n) if n else b""
             await self._route(method, target, body, writer)
-        except (ConnectionResetError, BrokenPipeError):
+        except OSError:
             pass  # client went away mid-stream; nothing to flush
         finally:
             self._conns.discard(task)
@@ -392,12 +492,15 @@ class ServeHTTPServer:
     async def _route(self, method: str, path: str, body: bytes,
                      writer: asyncio.StreamWriter) -> None:
         if path == "/healthz" and method == "GET":
-            writer.write(self._resp(200, {"ok": True,
+            health = self.engine.health
+            writer.write(self._resp(200, {"ok": health != "halted",
+                                          "health": health,
                                           "draining": self._draining}))
         elif path == "/v1/metrics" and method == "GET":
             doc = {
                 "server": self.stats.snapshot(),
                 "engine": self.engine.live_stats(),
+                "health": self.engine.health,
                 "wait_queue": len(self._pending) + self.engine.queue_depth,
                 "max_wait_queue": self.max_wait_queue,
                 "draining": self._draining,
@@ -447,16 +550,23 @@ class ServeHTTPServer:
         tag = doc.get("tag")
         if tag is not None and not isinstance(tag, (str, int)):
             raise ValueError("'tag' must be a string or integer")
-        # full engine validation (max_len, page budget, sampling/mode)
+        timeout = doc.get("timeout")
+        if timeout is not None:
+            try:
+                timeout = float(timeout)
+            except (TypeError, ValueError):
+                raise ValueError("'timeout' must be a number of seconds")
+        # full engine validation (max_len, page budget, sampling/mode,
+        # deadline) — the 'timeout' knob maps to the engine deadline
         self.engine.check_request(len(ids), max_new,
                                   temperature=temperature, top_k=top_k,
-                                  key=key)
+                                  key=key, deadline_s=timeout)
         return _Stream(
             prompt=np.asarray(ids, np.int32), max_new=max_new,
             temperature=temperature, top_k=top_k, key=key,
             tag=str(tag) if tag is not None else None,
             queue=asyncio.Queue(), loop=asyncio.get_running_loop(),
-            t_accept=time.perf_counter())
+            t_accept=time.perf_counter(), deadline_s=timeout)
 
     async def _generate(self, body: bytes,
                         writer: asyncio.StreamWriter) -> None:
@@ -483,28 +593,52 @@ class ServeHTTPServer:
             self._cv.notify_all()
         self.stats.on_accept()
 
-        writer.write(
-            b"HTTP/1.1 200 OK\r\n"
-            b"Content-Type: text/event-stream\r\n"
-            b"Cache-Control: no-store\r\n"
-            b"Transfer-Encoding: chunked\r\n"
-            b"Connection: close\r\n\r\n")
-        await writer.drain()
-        while True:
-            kind, payload = await item.queue.get()
-            if kind == "tok":
-                ev = {"token": payload}
-            elif kind == "done":
-                ev = {"done": True, "tokens": payload}
-            else:
-                ev = {"error": payload}
-            data = f"data: {json.dumps(ev)}\n\n".encode()
-            writer.write(b"%x\r\n" % len(data) + data + b"\r\n")
+        try:
+            writer.write(
+                b"HTTP/1.1 200 OK\r\n"
+                b"Content-Type: text/event-stream\r\n"
+                b"Cache-Control: no-store\r\n"
+                b"Transfer-Encoding: chunked\r\n"
+                b"Connection: close\r\n\r\n")
             await writer.drain()
-            if kind != "tok":
+            while True:
+                try:
+                    kind, payload = await asyncio.wait_for(
+                        item.queue.get(), timeout=self.heartbeat_s)
+                except asyncio.TimeoutError:
+                    # SSE comment: clients can tell a slow token from a
+                    # hung engine, and a dead socket surfaces here as a
+                    # write failure instead of lingering forever
+                    hb = b": heartbeat\n\n"
+                    writer.write(b"%x\r\n" % len(hb) + hb + b"\r\n")
+                    await writer.drain()
+                    continue
+                if kind == "tok":
+                    ev = {"token": payload}
+                elif kind == "done":
+                    ev = {"done": True, "status": "completed",
+                          "tokens": payload}
+                elif kind == "end":  # cancelled/deadline_exceeded/failed
+                    ev = {"done": True, "status": payload["status"],
+                          "error": payload["error"],
+                          "tokens": payload["tokens"]}
+                else:
+                    ev = {"error": payload}
+                data = f"data: {json.dumps(ev)}\n\n".encode()
+                writer.write(b"%x\r\n" % len(data) + data + b"\r\n")
+                await writer.drain()
+                if kind == "tok":
+                    continue
                 break
-        writer.write(b"0\r\n\r\n")
-        await writer.drain()
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, OSError,
+                asyncio.CancelledError):
+            # the client went away mid-stream (or drain force-closed us):
+            # stop the request so it releases its slot and pages
+            self.stats.on_client_disconnect()
+            self._request_cancel(item)
+            raise
 
     @staticmethod
     def _resp(status: int, doc: Dict, ctype: str = "application/json",

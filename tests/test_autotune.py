@@ -113,6 +113,52 @@ def test_corrupt_tuning_record_triggers_retune(tmp_path):
         assert autotune.validate_record(json.load(fh)) == []
 
 
+def test_torn_write_schema_record_is_evicted(tmp_path):
+    """A torn write can still decode as JSON but fail the schema; it
+    must be evicted (counted like a corrupt compile entry) and re-swept,
+    not resurface on every resolve."""
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    be.compile(_attn_graph(), opts)
+    [rec_path] = glob.glob(os.path.join(str(tmp_path), "autotune",
+                                        "*.tune.json"))
+    with open(rec_path) as fh:
+        rec = json.load(fh)
+    del rec["winner"]  # a partial record: valid JSON, invalid schema
+    with open(rec_path, "w") as fh:
+        json.dump(rec, fh)
+    be2 = Backend.create("jax", fresh=True)
+    be2.compile(_attn_graph(), opts)
+    st = be2.cache_stats()
+    assert st.autotune_sweeps == 1 and st.autotune_hits == 0
+    assert st.disk_evictions >= 1
+    with open(rec_path) as fh:  # re-recorded valid
+        assert autotune.validate_record(json.load(fh)) == []
+
+
+def test_garbage_winner_values_evicted_instead_of_raising(tmp_path):
+    """Schema-valid record whose winner values are garbage (hand edit /
+    interleaved torn write): resolution used to raise out of compile —
+    it must evict and fall back to a fresh sweep."""
+    opts = CompileOptions(cache_dir=str(tmp_path), autotune=True)
+    be = Backend.create("jax", fresh=True)
+    be.compile(_attn_graph(), opts)
+    [rec_path] = glob.glob(os.path.join(str(tmp_path), "autotune",
+                                        "*.tune.json"))
+    with open(rec_path) as fh:
+        rec = json.load(fh)
+    rec["winner"]["attn_impl"] = "bogus"  # passes schema, fails replace()
+    with open(rec_path, "w") as fh:
+        json.dump(rec, fh)
+    be2 = Backend.create("jax", fresh=True)
+    cf = be2.compile(_attn_graph(), opts)  # must not raise
+    st = be2.cache_stats()
+    assert st.autotune_sweeps == 1 and st.autotune_hits == 0
+    assert cf.options.attn_impl != "bogus"
+    with open(rec_path) as fh:
+        assert json.load(fh)["winner"]["attn_impl"] != "bogus"
+
+
 def _v2_knobs(**over):
     knobs = {"attn_impl": "naive", "attn_chunk": 256, "use_pallas": False,
              "mm_bm": 256, "mm_bn": 256, "mm_bk": 512,

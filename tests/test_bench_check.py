@@ -107,16 +107,29 @@ def _server_report(results, **over):
     return doc
 
 
+def _chaos_report(**over):
+    scenario = {"ok": True, "checks": {"pages_reclaimed": True}}
+    doc = {"mode": "chaos", "results": {},
+           "scenarios": {name: dict(scenario) for name in
+                         ("dispatch_failure", "deadline_expiry",
+                          "disconnect_storm", "cancel")},
+           "counters": {"cancelled": 4, "deadline_exceeded": 1,
+                        "failed": 1, "engine_errors": 1, "completed": 3}}
+    doc.update(over)
+    return doc
+
+
 def test_serving_matrix_gate(tmp_path):
     """scripts/check_serving_matrix.py: greedy parity + page-leak bounds
-    + HTTP-front-door drain over the report artifacts, with readable
-    failures."""
+    + HTTP-front-door drain + chaos-leg recovery contract over the
+    report artifacts, with readable failures."""
     res = {"0": [1, 2, 3], "1": [4, 5, 6], "2": [7, 8, 9]}
     good = {
         "cont": _report("continuous", res, kv=1365.0),
         "don": _report("donated", res),
         "paged": _report("paged", res, pool=_paged_pool(), kv=930.0),
         "server": _server_report(res),
+        "chaos": _chaos_report(),
     }
     paths = {}
     for name, doc in good.items():

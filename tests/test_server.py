@@ -51,7 +51,7 @@ def test_server_streams_match_direct_engine():
         assert metrics["server"]["requests_completed"] == n
         assert metrics["server"]["ttft_p95_ms"] > 0
         health = loadgen.fetch_json(srv.base_url, "/healthz")
-        assert health == {"ok": True, "draining": False}
+        assert health == {"ok": True, "health": "ok", "draining": False}
     assert res.results == ref
     assert srv.drain_ok is True
     assert srv.engine.pool.pages_in_use == 0
@@ -148,3 +148,89 @@ def test_server_requires_step_capable_engine():
         ServeHTTPServer(eng)
     with pytest.raises(ValueError, match="max_wait_queue"):
         ServeHTTPServer(_engine(), max_wait_queue=-1)
+    with pytest.raises(ValueError, match="max_body_bytes"):
+        ServeHTTPServer(_engine(), max_body_bytes=0)
+    with pytest.raises(ValueError, match="heartbeat_s"):
+        ServeHTTPServer(_engine(), heartbeat_s=0)
+
+
+def test_client_disconnect_reclaims_slot_and_pages():
+    """A client that hangs up mid-stream must not strand its request:
+    the server cancels it, the engine returns the slot and every page,
+    and the freed capacity admits the next request immediately."""
+    P, G = 4, 64
+    eng = _engine(slots=1, max_len=P + G, chunk_steps=1)
+    with running_server(eng, max_wait_queue=2) as srv:
+        url = srv.base_url
+        prompt = [int(t) for t in loadgen.make_prompts(1, P, CFG.vocab)[0]]
+        r = asyncio.run(loadgen.stream_generate(
+            url, {"prompt": prompt, "max_new": G}, timeout=120,
+            disconnect_after=2))
+        assert r.disconnected and len(r.tokens) >= 2
+        _poll(lambda: loadgen.fetch_json(url, "/v1/metrics")
+              ["engine"]["counters"]["cancelled"] >= 1,
+              "disconnect never cancelled the request")
+        _poll(lambda: loadgen.fetch_json(url, "/v1/metrics")
+              ["engine"]["active_slots"] == 0,
+              "cancelled request never released its slot")
+        assert loadgen.fetch_json(url, "/v1/metrics")["engine"][
+            "pages_in_use"] == 0
+        # the freed slot admits a fresh request, which runs to completion
+        r2 = asyncio.run(loadgen.stream_generate(
+            url, {"prompt": prompt, "max_new": 4}, timeout=120))
+        assert r2.status == 200 and not r2.error
+        assert r2.terminal == "completed" and len(r2.tokens) == 4
+        snap = loadgen.fetch_json(url, "/v1/metrics")["server"]
+        assert snap["client_disconnects"] >= 1
+    assert srv.drain_ok is True
+    assert eng.pool.pages_in_use == 0 and eng.pool.active == 0
+    assert srv.engine_report.counters["cancelled"] == 1
+    assert srv.engine_report.counters["completed"] == 1
+
+
+def test_request_timeout_maps_to_deadline():
+    """The 'timeout' knob becomes an engine deadline: the stream ends
+    with a distinct deadline_exceeded terminal status (and the pool
+    drains clean), instead of running to natural completion."""
+    P, G = 4, 48
+    eng = _engine(slots=1, max_len=P + G, chunk_steps=1)
+    with running_server(eng, max_wait_queue=2) as srv:
+        url = srv.base_url
+        prompt = [int(t) for t in loadgen.make_prompts(1, P, CFG.vocab)[0]]
+        r = asyncio.run(loadgen.stream_generate(
+            url, {"prompt": prompt, "max_new": G, "timeout": 0.001},
+            timeout=120))
+        assert r.status == 200
+        assert r.terminal == "deadline_exceeded", (r.terminal, r.error)
+        assert len(r.tokens) < G
+        _poll(lambda: loadgen.fetch_json(url, "/v1/metrics")
+              ["engine"]["counters"]["deadline_exceeded"] >= 1,
+              "deadline_exceeded counter never moved")
+        # bad timeout values are rejected up front
+        status, doc = asyncio.run(loadgen.http_json(
+            url, "POST", "/v1/generate",
+            {"prompt": prompt, "max_new": 2, "timeout": -1}))
+        assert status == 400 and "deadline" in doc["error"]
+    assert srv.drain_ok is True
+    assert eng.pool.pages_in_use == 0
+    assert srv.engine_report.counters["deadline_exceeded"] == 1
+
+
+def test_max_body_bytes_413():
+    """Oversized request bodies bounce with 413 + a JSON reason before
+    being read into memory; the connection still gets a clean answer and
+    the server keeps serving."""
+    eng = _engine()
+    with running_server(eng, max_body_bytes=256) as srv:
+        url = srv.base_url
+        big = {"prompt": [0, 1, 2], "max_new": 2, "tag": "x" * 512}
+        status, doc = asyncio.run(loadgen.http_json(
+            url, "POST", "/v1/generate", big))
+        assert status == 413, (status, doc)
+        assert "max_body_bytes" in doc["error"]
+        r = asyncio.run(loadgen.stream_generate(
+            url, {"prompt": [0, 1, 2], "max_new": 2}, timeout=120))
+        assert r.status == 200 and not r.error and len(r.tokens) == 2
+        snap = loadgen.fetch_json(url, "/v1/metrics")["server"]
+        assert snap["rejected_413"] == 1
+    assert srv.drain_ok is True

@@ -750,6 +750,118 @@ def bench_faults():
     assert parity, "an uninjected request lost token parity"
 
 
+def bench_prefix():
+    """E16: copy-on-write prefix page sharing + in-graph chunked prefill.
+
+    Headline: on a shared-system-prompt workload (three requests with an
+    identical 32-token prompt) the sharing pool reserves <= 0.6x the KV
+    bytes per active token of the unshared paged pool — requests point
+    their page tables at the publisher's prefix pages and copy only the
+    single re-processed tail page — while greedy outputs stay
+    token-identical to continuous mode and to each request run alone.
+    The stall rows show why prefill moved in-graph and chunked: a long
+    prompt admitted mid-decode stalls a short victim's inter-token p95
+    for one whole dense prefill, vs one bounded chunk at a time."""
+    from repro.configs import get_config
+    from repro.launch.engine import ServeEngine
+
+    cfg = get_config("deepseek-7b").reduced()
+    SLOTS, P, G, PS, MAX_LEN = 3, 32, 8, 4, 40
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
+
+    def run_paged(sharing, warm=False, **kw):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                          seed=0, page_size=PS, chunk_steps=2,
+                          prefix_sharing=sharing, **kw)
+        rids = [eng.submit(prompt, G) for _ in range(SLOTS)]
+        rep = eng.run()
+        assert eng.pool.verify() == [] and rep.pool.pages_in_use == 0, \
+            "shared-prefix run must drain every refcounted page"
+        return rids, rep
+
+    run_paged(True, warm=True)  # compile + XLA warm
+    srids, srep = run_paged(True)
+    urids, urep = run_paged(False)
+    cont = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN,
+                       mode="continuous", seed=0)
+    crids = [cont.submit(prompt, G) for _ in range(SLOTS)]
+    crep = cont.run()
+    alone = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode="paged",
+                        seed=0, page_size=PS, chunk_steps=2)
+    arid = alone.submit(prompt, G)
+    aref = alone.run().results[arid]
+    parity = all(
+        np.array_equal(srep.results[s], crep.results[c])
+        and np.array_equal(srep.results[s], aref)
+        for s, c in zip(srids, crids))
+    emit("E16_prefix", "prefix_parity", int(parity), "bool")
+    assert parity, "prefix sharing changed greedy outputs"
+
+    skv = srep.kv_bytes_per_active_token
+    ukv = urep.kv_bytes_per_active_token
+    ratio = skv / ukv
+    emit("E16_prefix", "prefix_shared_kv_bytes_per_token", skv, "B/tok")
+    emit("E16_prefix", "prefix_unshared_kv_bytes_per_token", ukv, "B/tok")
+    emit("E16_prefix", "prefix_kv_bytes_ratio", ratio, "x")
+    assert ratio <= 0.6, (
+        f"shared-prefix pool must collapse KV bytes per active token to "
+        f"<= 0.6x the unshared paged pool, got {ratio:.3f}x")
+    p = srep.pool
+    emit("E16_prefix", "prefix_cow_copies", p.cow_copies, "")
+    emit("E16_prefix", "prefix_shared_attaches", p.shared_attaches, "")
+    emit("E16_prefix", "prefix_peak_pages_shared", p.peak_pages_in_use,
+         "pages")
+    emit("E16_prefix", "prefix_peak_pages_unshared",
+         urep.pool.peak_pages_in_use, "pages")
+    assert p.cow_copies >= 1 and p.shared_attaches >= 1
+
+    # chunked prefill exactness: every chunk size (ragged tails
+    # included) and the legacy dense path decode the same tokens
+    chunk_ok = True
+    for chunk in (5, 16, 0):
+        eng = ServeEngine(cfg, slots=1, max_len=MAX_LEN, mode="paged",
+                          seed=0, page_size=PS, chunk_steps=2,
+                          prefill_chunk=chunk)
+        rid = eng.submit(prompt, G)
+        chunk_ok &= np.array_equal(eng.run().results[rid], aref)
+    emit("E16_prefix", "prefix_chunked_prefill_parity", int(chunk_ok),
+         "bool")
+    assert chunk_ok, "chunked prefill diverged from dense prefill"
+
+    # prefill stall: a short victim decodes while a 32-token prompt is
+    # admitted mid-stream; the victim's p95 inter-token gap under
+    # chunked prefill (one bounded chunk per step) vs dense prefill
+    # (the whole prompt in one dispatch stalls the step loop)
+    victim = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+
+    def stall_p95(prefill_chunk):
+        def once():
+            eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, mode="paged",
+                              seed=0, page_size=PS, chunk_steps=1,
+                              prefix_sharing=False,
+                              prefill_chunk=prefill_chunk)
+            rv = eng.submit(victim, 24)
+            arrivals = []
+            intruded = False
+            while not eng._requests[rv].done:
+                if not intruded and len(eng._requests[rv].tokens) >= 2:
+                    eng.submit(prompt, 2)  # long prompt lands mid-decode
+                    intruded = True
+                for rid, _ in eng.step():
+                    if rid == rv:
+                        arrivals.append(time.perf_counter())
+            eng.run()
+            return arrivals
+        once()  # warm every graph this schedule compiles
+        arrivals = once()
+        gaps = np.diff(arrivals) * 1e3
+        return float(np.percentile(gaps, 95))
+
+    emit("E16_prefix", "prefix_stall_p95_ms_chunked", stall_p95(PS), "ms")
+    emit("E16_prefix", "prefix_stall_p95_ms_dense", stall_p95(0), "ms")
+
+
 def bench_scaling():
     """The dry-run roofline table (claim E8 / deliverable g)."""
     base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -811,6 +923,7 @@ SECTIONS = {
     "serving": bench_serving,
     "paged": bench_paged,
     "server": bench_server,
+    "prefix": bench_prefix,
     "autotune": bench_autotune,
     "kernels": bench_kernels,
     "faults": bench_faults,

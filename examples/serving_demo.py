@@ -25,6 +25,17 @@ verifiably return), a per-request deadline expiring into its own
 ``FaultInjector`` raising inside dispatch — contained into a structured
 per-request failure with the engine degraded but still serving.
 
+The fifth section is the PR 9 prefix-sharing contract: three requests
+with one identical 16-token system prompt run on a paged engine with
+copy-on-write sharing on (the default) and off.  With sharing on, the
+followers point their page tables at the publisher's hashed prefix
+pages (``shared_attaches``), copy only on the first divergent write
+(``cow_copies``), reserve far fewer KV bytes per active token — and
+decode exactly the same greedy tokens, with every refcounted page
+released on drain (``pool.verify()`` comes back empty).  Prompts are
+prefilled in-graph in bounded chunks (``prefill_chunk``) rather than
+one dense dispatch per prompt length.
+
 The final section shows the fused-kernel layer underneath: compiling a
 serve-family graph at O2 pattern-matches the unfused matmul chains into
 SwiGLU / NormMatmul / RotaryQKV compound ops (per-compound hit counts
@@ -197,6 +208,35 @@ def main():
     print(f"degraded engine still serves: req{rb2} -> "
           f"{rep.results[rb2].tolist()} "
           f"(pages_in_use={eng.pool.pages_in_use})")
+
+    # --- prefix sharing: COW pages under a shared system prompt ---
+    print("--- prefix sharing ---")
+    sys_prompt = rng.integers(0, cfg.vocab, size=(16,)).astype(np.int32)
+
+    def shared_run(sharing):
+        # prefix_sharing defaults on for paged; prefill_chunk defaults
+        # to 4 * page_size, so the 16-token prompt prefills in-graph
+        eng = ServeEngine(cfg, slots=3, max_len=24, mode="paged", seed=0,
+                          page_size=4, chunk_steps=2,
+                          prefix_sharing=sharing)
+        rids = [eng.submit(sys_prompt, 4) for _ in range(3)]
+        return eng, rids, eng.run()
+
+    eng, rids, rep = shared_run(True)
+    p = rep.pool
+    print(f"3 requests x one 16-token system prompt: "
+          f"shared_attaches={p.shared_attaches} cow_copies={p.cow_copies} "
+          f"peak {p.peak_pages_in_use} pages")
+    _, urids, urep = shared_run(False)
+    print(f"kv bytes per active token: "
+          f"{rep.kv_bytes_per_active_token:.0f} shared vs "
+          f"{urep.kv_bytes_per_active_token:.0f} unshared "
+          f"(peak {urep.pool.peak_pages_in_use} pages)")
+    same = all(np.array_equal(rep.results[s], urep.results[u])
+               for s, u in zip(rids, urids))
+    print(f"token parity with sharing off: {same}, drained "
+          f"pages_in_use={eng.pool.pages_in_use}, "
+          f"verify() -> {eng.pool.verify()}")
 
     # --- fused compound kernels + the autotuned knob resolution ---
     print("--- fused kernels ---")

@@ -17,7 +17,11 @@ section (E14) must show fused-vs-unfused microbenchmarks whose
 autotune-selected ratios are <= 1 plus clean fallback/re-resolve
 invariants, and the faults section (E15) must show the fault-tolerance
 contract rows: a positive cancel-reclaim latency, each lifecycle
-counter moved, and the containment/reclaim/parity invariants all == 1.
+counter moved, and the containment/reclaim/parity invariants all == 1,
+and the prefix section (E16) must show the shared-prefix headline
+(``prefix_kv_bytes_ratio <= 0.6`` with both parity invariants == 1, a
+copy-on-write actually fired, and the chunked/dense prefill-stall p95
+rows present).
 Every failure is a
 readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
@@ -93,6 +97,20 @@ REQUIRED_FAULTS_ROWS = (
     "faults_engine_errors_total",
     "faults_dispatch_contained", "faults_pages_reclaimed",
     "faults_uninjected_parity",
+)
+# E16: copy-on-write prefix sharing + chunked prefill.  The ratio row is
+# the headline gate — a shared-system-prompt workload must collapse KV
+# bytes per active token to <= 0.6x the unshared paged pool — the parity
+# rows are invariants (sharing and chunking are invisible to greedy
+# outputs), the cow row proves a copy-on-write actually fired, and the
+# stall rows record the chunked-vs-dense prefill inter-token p95.
+REQUIRED_PREFIX_ROWS = (
+    "prefix_shared_kv_bytes_per_token",
+    "prefix_unshared_kv_bytes_per_token",
+    "prefix_kv_bytes_ratio",
+    "prefix_cow_copies", "prefix_shared_attaches",
+    "prefix_parity", "prefix_chunked_prefill_parity",
+    "prefix_stall_p95_ms_chunked", "prefix_stall_p95_ms_dense",
 )
 
 
@@ -253,6 +271,25 @@ def check(path: str) -> int:
             if v is not None and v != 1:
                 errors.append(f"faults row {name} must be 1 (the "
                               f"fault-tolerance recovery contract), got {v}")
+    if "prefix" in (doc.get("sections") or []):
+        vals = require("prefix", "E16_prefix", REQUIRED_PREFIX_ROWS)
+        ratio = vals.get("prefix_kv_bytes_ratio")
+        if ratio is not None and ratio > 0.6:
+            errors.append(f"prefix row prefix_kv_bytes_ratio must be "
+                          f"<= 0.6 (the shared-system-prompt workload "
+                          f"collapses KV bytes per active token), "
+                          f"got {ratio}")
+        for name in ("prefix_parity", "prefix_chunked_prefill_parity"):
+            v = vals.get(name)
+            if v is not None and v != 1:
+                errors.append(f"prefix row {name} must be 1 (sharing and "
+                              f"chunked prefill are invisible to greedy "
+                              f"outputs), got {v}")
+        cow = vals.get("prefix_cow_copies")
+        if cow is not None and cow < 1:
+            errors.append(f"prefix row prefix_cow_copies must be >= 1 "
+                          f"(the workload must exercise a copy-on-write), "
+                          f"got {cow}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -292,7 +329,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["serving", "paged", "server", "kernels",
-                             "faults"])
+                             "faults", "prefix"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

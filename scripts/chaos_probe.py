@@ -15,6 +15,11 @@ and the real HTTP front door, each with a deterministic
     (``client.disconnect_after_n``); the server cancels each request.
   * ``cancel``            — direct-engine ``cancel(rid)`` at a chunk
     boundary; the survivor keeps exact token parity with a solo run.
+  * ``shared_prefix_storm`` — cancel storm on a COW shared-prefix
+    workload (PR 9): the prefix publisher dies mid-decode while sharers
+    hold references to its pages, a long sharer dies mid-prefill-chunk;
+    refcounted pages must be decremented exactly once and the surviving
+    sharer keeps solo-run token parity.
 
 Every scenario must end with ``pages_in_use == 0``, zero leaked slots,
 a clean drain, and token parity for whatever was not injected.  The
@@ -164,11 +169,59 @@ def scenario_cancel() -> Dict:
     }) | {"counters": dict(rep.counters), "reclaim_ms": reclaim_ms}
 
 
+def scenario_shared_prefix_storm() -> Dict:
+    """Cancel storm on a COW shared-prefix workload: a publisher and two
+    sharers (one full-prompt match that copies-on-write, one longer
+    prompt attaching the shared pages mid-prefill) are admitted; the
+    publisher is cancelled mid-decode while the sharers still hold
+    references to its pages, and the long sharer is cancelled mid-chunk.
+    Refcounted pages must be decremented exactly once — no double-free
+    when the storm lands, no leak when the last sharer goes — and the
+    surviving sharer keeps exact token parity with a solo run."""
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, CFG.vocab, size=(8,)).astype(np.int32)
+    longp = np.concatenate(
+        [base, rng.integers(0, CFG.vocab, size=(8,)).astype(np.int32)])
+    ref = _reference(base, G)
+    eng = _engine(slots=3, max_len=24, prefill_chunk=4)
+    rid_pub = eng.submit(base, G)
+    rid_f1 = eng.submit(base, G)       # full match: attaches + COWs
+    rid_f2 = eng.submit(longp, 4)      # partial match: attaches, extends
+    # prefill dedup holds the sharers back until the publisher's prefix
+    # pages are indexed; three steps later all three rows are live
+    for _ in range(3):
+        eng.step()
+    p = eng.pool.stats()
+    attached = p.shared_attaches
+    cowed = p.cow_copies
+    mid_prefill = eng._requests[rid_f2].prefill_pos is not None
+    cancelled_pub = eng.cancel(rid_pub, "shared-prefix storm")
+    cancelled_f2 = eng.cancel(rid_f2, "shared-prefix storm")
+    eng.step()  # the boundary where both cancels land
+    rep = eng.run()
+    p = eng.pool.stats()
+    return _gate({
+        "sharers_attached": attached >= 4,
+        "cow_fired": cowed >= 1,
+        "long_sharer_mid_prefill": mid_prefill,
+        "cancels_accepted": cancelled_pub is True and cancelled_f2 is True,
+        "terminal_statuses": rep.statuses[rid_pub] == "cancelled"
+                             and rep.statuses[rid_f2] == "cancelled",
+        "survivor_parity": [int(t) for t in rep.results[rid_f1]] == ref,
+        "refs_balanced": p.ref_allocs == p.ref_frees,
+        "pages_freed_exactly_once": p.page_allocs == p.page_frees,
+        "accounting_exact": eng.pool.verify() == [],
+        "pages_reclaimed": p.pages_in_use == 0,
+        "slots_reclaimed": p.active == 0,
+    }) | {"counters": dict(rep.counters)}
+
+
 SCENARIOS = {
     "dispatch_failure": scenario_dispatch_failure,
     "deadline_expiry": scenario_deadline_expiry,
     "disconnect_storm": scenario_disconnect_storm,
     "cancel": scenario_cancel,
+    "shared_prefix_storm": scenario_shared_prefix_storm,
 }
 
 

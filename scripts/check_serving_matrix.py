@@ -23,11 +23,24 @@ contract the modes share:
     order cannot scramble the comparison), drained cleanly
     (``drain_ok`` with ``pages_in_use == 0``), and recorded a positive
     TTFT p95.
+  * the shared-prefix pair (``--report-leg paged-shared-prefix`` with
+    sharing on vs ``paged-shared-base`` with ``--no-prefix-sharing``,
+    both on the same shared-prompt workload) decoded token-identical
+    streams while the sharing run actually attached prefix pages
+    (``shared_attaches > 0``), copied on first divergent write
+    (``cow_copies > 0``), reserved strictly fewer KV bytes per active
+    token, and released every refcounted page on drain
+    (``pages_in_use == 0``, ``ref_allocs == ref_frees``,
+    ``pool_verify`` empty);
   * the chaos leg (``mode == "chaos"``, written by
     ``scripts/chaos_probe.py``) ran every fault-injection scenario
     green, and the ``cancelled`` / ``deadline_exceeded`` /
     ``engine_errors`` counters each moved — proving the injected faults
     exercised their distinct terminal paths.
+
+Reports are keyed by their ``leg`` name (``serve --report-leg``),
+falling back to ``mode`` — two runs of the same engine mode must name
+themselves apart.
 
 Every failure is a readable ``MATRIX FAIL`` line; exit code 1 on any.
 """
@@ -47,20 +60,31 @@ def _load(paths):
         except (OSError, json.JSONDecodeError) as exc:
             errors.append(f"{p}: unreadable: {exc}")
             continue
-        mode = doc.get("mode")
-        if not mode or "results" not in doc:
+        # the leg name (serve --report-leg) keys the report so two runs
+        # of the same engine mode (e.g. paged shared vs unshared prefix)
+        # can coexist; mode is the legacy fallback
+        leg = doc.get("leg") or doc.get("mode")
+        if not leg or "results" not in doc:
             errors.append(f"{p}: not an EngineReport dump "
                           f"(keys: {sorted(doc)[:8]})")
             continue
-        reports[mode] = doc
+        if leg in reports:
+            errors.append(f"{p}: duplicate leg {leg!r} — name one run "
+                          f"with --report-leg")
+            continue
+        reports[leg] = doc
     return reports, errors
 
 
 def check(paths) -> int:
     reports, errors = _load(paths)
+    # shared-prefix legs run a different workload (identical prompts),
+    # so they parity-check against each other below, never against the
+    # independent-prompt legs
     greedy = {m: d for m, d in reports.items()
               if m != "chaos"
-              and not d.get("workload", {}).get("temperature")}
+              and not d.get("workload", {}).get("temperature")
+              and not d.get("workload", {}).get("shared_prefix_len")}
 
     if len(greedy) >= 2:
         base_mode = ("continuous" if "continuous" in greedy
@@ -122,6 +146,63 @@ def check(paths) -> int:
                 f"paged reserved {pb:.1f} KV B/active-token — not "
                 f"strictly fewer than continuous's {cb:.1f}")
 
+    shared = reports.get("paged-shared-prefix")
+    sbase = reports.get("paged-shared-base")
+    if shared is None or sbase is None:
+        errors.append(
+            f"shared-prefix legs missing among {sorted(reports)} — the "
+            f"matrix needs 'paged-shared-prefix' (sharing on) and "
+            f"'paged-shared-base' (--no-prefix-sharing) on the same "
+            f"shared-prompt workload")
+    else:
+        if sorted(shared["results"]) != sorted(sbase["results"]):
+            errors.append(
+                f"shared-prefix: request ids differ from the unshared "
+                f"baseline ({sorted(shared['results'])} vs "
+                f"{sorted(sbase['results'])})")
+        else:
+            for rid in sorted(sbase["results"]):
+                if shared["results"][rid] != sbase["results"][rid]:
+                    errors.append(
+                        f"shared-prefix: req {rid} diverged from the "
+                        f"unshared paged baseline — COW sharing must be "
+                        f"invisible to greedy outputs")
+        pool = shared.get("pool") or {}
+        if not pool.get("cow_copies", 0) > 0:
+            errors.append(
+                f"shared-prefix: cow_copies = {pool.get('cow_copies')!r} "
+                f"— the workload never exercised a copy-on-write")
+        if not pool.get("shared_attaches", 0) > 0:
+            errors.append(
+                f"shared-prefix: shared_attaches = "
+                f"{pool.get('shared_attaches')!r} — no request ever "
+                f"attached a shared prefix page")
+        if pool.get("pages_in_use") != 0:
+            errors.append(
+                f"shared-prefix: {pool.get('pages_in_use')} pages still "
+                f"in use after drain — refcounted pages not fully "
+                f"released")
+        if pool.get("ref_allocs") != pool.get("ref_frees"):
+            errors.append(
+                f"shared-prefix: ref_allocs {pool.get('ref_allocs')} != "
+                f"ref_frees {pool.get('ref_frees')} (page-reference "
+                f"leak)")
+        if shared.get("pool_verify"):
+            errors.append(
+                f"shared-prefix: pool.verify() found "
+                f"{shared['pool_verify']}")
+        skv = shared.get("kv_bytes_per_active_token")
+        bkv = sbase.get("kv_bytes_per_active_token")
+        if skv is None or bkv is None:
+            errors.append(
+                f"shared-prefix: kv_bytes_per_active_token missing "
+                f"(shared={skv!r}, base={bkv!r})")
+        elif skv >= bkv:
+            errors.append(
+                f"shared-prefix: sharing reserved {skv:.1f} KV "
+                f"B/active-token — not strictly fewer than the unshared "
+                f"paged baseline's {bkv:.1f}")
+
     srv = reports.get("server")
     if srv is None:
         errors.append(f"no server report among {sorted(reports)} — the "
@@ -153,7 +234,7 @@ def check(paths) -> int:
     else:
         scen = chaos.get("scenarios") or {}
         for name in ("dispatch_failure", "deadline_expiry",
-                     "disconnect_storm", "cancel"):
+                     "disconnect_storm", "cancel", "shared_prefix_storm"):
             s = scen.get(name)
             if s is None:
                 errors.append(f"chaos: scenario {name!r} missing")

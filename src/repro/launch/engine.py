@@ -44,6 +44,7 @@ Donation invariants (see ROADMAP "Serving engine (PR 2)"):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -96,6 +97,10 @@ class Request:
     deadline: Optional[float] = None     # absolute perf_counter deadline
     cancel_reason: Optional[str] = None  # set by cancel(); honoured at
                                          # the next step/chunk boundary
+    # chunked prefill (PR 9): next prompt position to prefill while the
+    # request is admitted but its prompt is not fully cached yet; None
+    # once prefill completes (or on the dense-prefill path throughout)
+    prefill_pos: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -306,6 +311,15 @@ class PagedPoolStats:
     page_frees: int
     peak_active: int
     decode_arena_bytes: int  # compiled chunk's planned intermediate arena
+    # prefix sharing (PR 9): the *logical* reference ledger.  page_allocs/
+    # page_frees above stay strictly physical (a COW copy is one alloc,
+    # a page is freed once when its last reference drops) so every
+    # pre-existing leak gate holds; the ref ledger counts page-table
+    # references — attach/detach of shared pages included.
+    ref_allocs: int = 0
+    ref_frees: int = 0
+    cow_copies: int = 0       # pages copied on first divergent write
+    shared_attaches: int = 0  # prefix pages attached to a second+ slot
 
 
 class PagedKVPool:
@@ -353,10 +367,27 @@ class PagedKVPool:
         self._used_tokens = [0] * self.slots
         self._reserved = [0] * self.slots
         self.page_table = np.zeros((self.slots, self.max_pages), np.int32)
+        # prefix sharing (PR 9): per-page logical refcounts, the
+        # content-hash index over *full* prefix pages (page j of a prompt
+        # keyed by the digest of prompt[:(j+1)*page_size] — chaining the
+        # whole prefix into the key, so a hit certifies every earlier row
+        # too), and its reverse map.  Full prefix pages are immutable
+        # once prefilled (decode writes land at pos >= P), so the
+        # publisher never copies; only a *sharer* re-processing its last
+        # prompt token into a fully-shared page triggers COW, and that
+        # single page is budgeted via _cow_pending.
+        self._page_refs: Dict[int, int] = {}
+        self._prefix_index: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self._cow_pending = [0] * self.slots
         self.allocs = 0
         self.frees = 0
         self.page_allocs = 0
         self.page_frees = 0
+        self.ref_allocs = 0
+        self.ref_frees = 0
+        self.cow_copies = 0
+        self.shared_attaches = 0
         self.peak_active = 0
         self.peak_pages_in_use = 0
         self._frag_sum = 0.0
@@ -388,9 +419,13 @@ class PagedKVPool:
 
     @property
     def _outstanding(self) -> int:
-        """Reserved-but-not-yet-allocated pages across active slots."""
-        return sum(r - len(p)
-                   for r, p in zip(self._reserved, self._slot_pages))
+        """Reserved-but-not-yet-allocated pages across active slots,
+        plus each slot's pending copy-on-write page (a sharer whose whole
+        prompt matched will copy the last shared page on its first
+        write — that physical page must stay spoken for)."""
+        return sum(max(0, r - len(p) + c)
+                   for r, p, c in zip(self._reserved, self._slot_pages,
+                                      self._cow_pending))
 
     @property
     def committed_pages(self) -> int:
@@ -401,22 +436,28 @@ class PagedKVPool:
         return self.pages_in_use + self._outstanding
 
     def can_admit(self, total_tokens: int, *, held_slots: int = 0,
-                  held_pages: int = 0) -> bool:
+                  held_pages: int = 0, shared_pages: int = 0) -> bool:
         """Would a ``total_tokens``-long request be admitted right now?
 
         ``held_slots``/``held_pages`` discount capacity already spoken
         for by requests that are queued but not yet allocated (the
         engine's internal queue, the server's admission probe) — without
         them a front door would over-admit into capacity the queue ahead
-        of it is about to consume."""
+        of it is about to consume.  ``shared_pages`` credits prefix pages
+        the request would *attach* instead of allocate (see
+        :meth:`probe_shared`) — sharing is an admission-capacity win,
+        not just a bytes win."""
+        need = max(self.pages_for(total_tokens) - int(shared_pages), 0)
         return len(self._free_slots) - held_slots >= 1 and \
-            len(self._free_pages) - self._outstanding - held_pages >= \
-            self.pages_for(total_tokens)
+            len(self._free_pages) - self._outstanding - held_pages >= need
 
-    def alloc(self, total_tokens: int) -> int:
+    def alloc(self, total_tokens: int, *, shared_pages: int = 0) -> int:
         """Claim a slot and reserve pages for a ``total_tokens``-long
-        request (prompt + generation)."""
-        if not self.can_admit(total_tokens):
+        request (prompt + generation).  ``shared_pages`` must match the
+        :meth:`probe_shared` credit the admission decision used; the
+        reservation itself stays whole-lifetime (attached pages count
+        toward it the moment :meth:`share_prefix` links them)."""
+        if not self.can_admit(total_tokens, shared_pages=shared_pages):
             raise RuntimeError(
                 f"paged KV pool exhausted: active={self.active}/"
                 f"{self.slots} slots, {len(self._free_pages)} free pages "
@@ -437,11 +478,22 @@ class PagedKVPool:
         if slot in self._free_slots:
             raise ValueError(f"double free of slot {slot}")
         for pid in self._slot_pages[slot]:
-            self._free_pages.append(pid)
-            self.page_frees += 1
+            self._page_refs[pid] -= 1
+            self.ref_frees += 1
+            if self._page_refs[pid] == 0:
+                # last reference: the physical page returns to the free
+                # list (and leaves the prefix index — index entries are
+                # only valid while some slot keeps the content alive)
+                del self._page_refs[pid]
+                key = self._page_key.pop(pid, None)
+                if key is not None:
+                    del self._prefix_index[key]
+                self._free_pages.append(pid)
+                self.page_frees += 1
         self._slot_pages[slot] = []
         self._reserved[slot] = 0
         self._used_tokens[slot] = 0
+        self._cow_pending[slot] = 0
         self.page_table[slot, :] = 0   # back to the trash page
         self._free_slots.append(slot)
         self.frees += 1
@@ -459,9 +511,131 @@ class PagedKVPool:
             pid = self._free_pages.pop()
             self.page_table[slot, len(pages)] = pid
             pages.append(pid)
+            self._page_refs[pid] = 1
             self.page_allocs += 1
+            self.ref_allocs += 1
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
+
+    # -- copy-on-write prefix sharing (PR 9) ---------------------------------
+    def _digest(self, prompt: np.ndarray, upto_page: int) -> bytes:
+        """Index key for full prefix page ``upto_page`` of ``prompt``:
+        the hash runs over *all* tokens up to and including that page, so
+        a match certifies the entire chain of earlier pages as well."""
+        n = (upto_page + 1) * self.page_size
+        return hashlib.sha256(
+            np.ascontiguousarray(prompt[:n], np.int32).tobytes()).digest()
+
+    def probe_shared(self, prompt) -> Tuple[int, int]:
+        """Non-mutating admission probe: ``(covered_tokens,
+        reusable_pages)`` for a prompt against the current prefix index.
+        ``reusable_pages`` is the page credit an admission may take: a
+        fully-matched prompt re-processes its last token, so the page
+        holding it will be COW-copied and earns no credit."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        matched = 0
+        for j in range(len(prompt) // self.page_size):
+            if self._digest(prompt, j) not in self._prefix_index:
+                break
+            matched += 1
+        covered = matched * self.page_size
+        reusable = matched if covered < len(prompt) else max(matched - 1, 0)
+        return covered, reusable
+
+    def share_prefix(self, slot: int, prompt) -> int:
+        """Attach index-matching full prefix pages to freshly-allocated
+        ``slot`` (page table pointed at the shared physical pages,
+        refcounts bumped); returns the number of prompt tokens covered.
+        The engine prefills the remainder — always re-processing at
+        least the last prompt token, whose write COW-copies the final
+        shared page when the whole prompt matched."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        pages = self._slot_pages[slot]
+        if pages:
+            raise RuntimeError(
+                f"share_prefix on slot {slot} which already holds "
+                f"{len(pages)} pages (must run before any growth)")
+        matched: List[int] = []
+        for j in range(len(prompt) // self.page_size):
+            pid = self._prefix_index.get(self._digest(prompt, j))
+            if pid is None:
+                break
+            matched.append(pid)
+        for j, pid in enumerate(matched):
+            self._page_refs[pid] += 1
+            self.page_table[slot, j] = pid
+            pages.append(pid)
+            self.ref_allocs += 1
+            self.shared_attaches += 1
+        covered = len(matched) * self.page_size
+        if matched and covered >= len(prompt):
+            # whole prompt matched: re-processing the last prompt token
+            # will write into the final shared page — keep one physical
+            # page spoken for until prepare_writes() performs the copy
+            self._cow_pending[slot] = 1
+        return covered
+
+    def publish_prefix(self, slot: int, prompt) -> int:
+        """Index ``slot``'s full prefix pages once its prompt is fully
+        cached (they are never written again: decode rows land at
+        positions >= len(prompt)).  Pages whose chain digest is already
+        indexed are skipped — first publisher wins.  Returns the number
+        of pages newly indexed."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        pages = self._slot_pages[slot]
+        published = 0
+        for j in range(len(prompt) // self.page_size):
+            key = self._digest(prompt, j)
+            if key in self._prefix_index:
+                continue
+            pid = pages[j]
+            if pid in self._page_key:
+                continue  # already indexed under a different chain
+            self._prefix_index[key] = pid
+            self._page_key[pid] = key
+            published += 1
+        return published
+
+    def prepare_writes(self, slot: int, lo: int, hi: int) -> int:
+        """Make token rows ``lo..hi`` (inclusive) of ``slot`` privately
+        writable before an in-graph write lands on them: pages shared
+        with another slot (ref > 1) are copied onto a fresh physical
+        page first (the copy-on-write), and pages this slot holds alone
+        but published to the prefix index are de-indexed (their content
+        is about to diverge from the indexed digest).  Returns the
+        number of pages copied."""
+        pages = self._slot_pages[slot]
+        ps = self.page_size
+        copied = 0
+        for j in range(lo // ps, min(hi // ps, len(pages) - 1) + 1):
+            pid = pages[j]
+            if self._page_refs.get(pid, 0) > 1:
+                if not self._free_pages:
+                    raise RuntimeError(
+                        f"paged KV pool out of pages copying shared page "
+                        f"{pid} for slot {slot} (reservation bug: the "
+                        f"pending COW page must be spoken for at "
+                        f"admission)")
+                new = self._free_pages.pop()
+                for i, buf in enumerate(self.buffers):
+                    self.buffers[i] = buf.at[:, new].set(buf[:, pid])
+                self._page_refs[pid] -= 1
+                self._page_refs[new] = 1
+                pages[j] = new
+                self.page_table[slot, j] = new
+                self.page_allocs += 1
+                self.cow_copies += 1
+                copied += 1
+                # the only shared page a slot ever writes is its pending
+                # tail page — the copy discharges the reservation
+                self._cow_pending[slot] = 0
+                self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                             self.pages_in_use)
+            elif pid in self._page_key:
+                # sole holder of an indexed page: privatize in place
+                del self._prefix_index[self._page_key.pop(pid)]
+                self._cow_pending[slot] = 0
+        return copied
 
     def note_used(self, slot: int, tokens: int) -> None:
         """Record how many token rows ``slot`` actually holds (for the
@@ -472,13 +646,17 @@ class PagedKVPool:
         """Record the allocated-but-unused token-row fraction at a
         dispatch.  Sampled *during* decode (the engine calls this once
         per dispatch) because the instantaneous value after the workload
-        drains is vacuously 0 — every page is back on the free list."""
-        cap = self.pages_in_use * self.page_size
+        drains is vacuously 0 — every page is back on the free list.
+        Capacity is *logical* (each slot's attached pages, a shared page
+        once per reference) so the fraction stays in [0, 1) under prefix
+        sharing; without sharing it equals the physical footprint."""
+        cap = sum(len(p) for p in self._slot_pages) * self.page_size
         if cap:
             self._frag_sum += 1.0 - sum(self._used_tokens) / cap
             self._frag_samples += 1
 
-    def write_prefix(self, slot: int, name: str, prefix) -> None:
+    def write_prefix(self, slot: int, name: str, prefix,
+                     start_tok: int = 0) -> None:
         """Scatter a (L, 1, Hkv, Plen, D) prefill cache into ``slot``'s
         pages (``ensure_pages(slot, Plen - 1)`` first).
 
@@ -488,15 +666,24 @@ class PagedKVPool:
         whole pool buffer, so a per-page loop would cost O(pages_per_
         prompt x pool_bytes) per admission).  The padding rows land
         beyond ``pos`` and stay masked until a later step overwrites
-        them."""
+        them.  ``start_tok`` skips the leading rows already attached via
+        :meth:`share_prefix` — only pages from ``start_tok // page_size``
+        on are written (run :meth:`prepare_writes` over that range
+        first), and rows of the first written page below ``start_tok``
+        are rewritten with byte-identical values (same prompt, same
+        graph), which is harmless."""
         import jax.numpy as jnp
 
         i = self.names.index(name)
         L, _, Hkv, Plen, D = prefix.shape
         ps = self.page_size
-        pids = self._slot_pages[slot][:-(-Plen // ps)]
-        x = prefix[:, 0]
-        pad = len(pids) * ps - Plen
+        p0 = int(start_tok) // ps
+        pids = self._slot_pages[slot][p0:-(-Plen // ps)]
+        if not pids:
+            return
+        x = prefix[:, 0][:, :, p0 * ps:, :]
+        rows = Plen - p0 * ps
+        pad = len(pids) * ps - rows
         if pad:
             x = jnp.concatenate(
                 [x, jnp.zeros((L, Hkv, pad, D), x.dtype)], axis=2)
@@ -515,10 +702,14 @@ class PagedKVPool:
         runs this after failing the in-flight requests — the exact page
         bookkeeping is what the cancellation contract promises."""
         problems = []
-        held = sum(len(p) for p in self._slot_pages)
-        if held != self.pages_in_use:
-            problems.append(f"slot page lists hold {held} pages but "
-                            f"pages_in_use says {self.pages_in_use}")
+        held: Dict[int, int] = {}
+        for p in self._slot_pages:
+            for pid in p:
+                held[pid] = held.get(pid, 0) + 1
+        if len(held) != self.pages_in_use:
+            problems.append(f"slot page lists hold {len(held)} distinct "
+                            f"pages but pages_in_use says "
+                            f"{self.pages_in_use}")
         if self.page_allocs - self.page_frees != self.pages_in_use:
             problems.append(
                 f"page_allocs({self.page_allocs}) - "
@@ -527,11 +718,28 @@ class PagedKVPool:
         if self.allocs - self.frees != self.active:
             problems.append(f"allocs({self.allocs}) - frees({self.frees}) "
                             f"!= active({self.active})")
-        pages = [pid for p in self._slot_pages for pid in p] \
-            + list(self._free_pages)
-        if sorted(pages) != list(range(1, self.n_pages)):
+        live_refs = sum(held.values())
+        if self.ref_allocs - self.ref_frees != live_refs:
+            problems.append(
+                f"ref_allocs({self.ref_allocs}) - "
+                f"ref_frees({self.ref_frees}) != live page "
+                f"references({live_refs})")
+        if dict(self._page_refs) != held:
+            problems.append("per-page refcounts disagree with the slots' "
+                            "page-table references")
+        if sorted(list(held) + list(self._free_pages)) != \
+                list(range(1, self.n_pages)):
             problems.append("free list + slot pages do not partition the "
                             "physical pages (lost or duplicated page)")
+        if len(self._page_key) != len(self._prefix_index):
+            problems.append("prefix index and its reverse map disagree")
+        for key, pid in self._prefix_index.items():
+            if self._page_key.get(pid) != key:
+                problems.append(f"prefix index entry for page {pid} does "
+                                f"not round-trip the reverse map")
+            elif pid not in held:
+                problems.append(f"prefix index references page {pid} "
+                                f"which no slot holds")
         for slot in self._free_slots:
             if 0 <= slot < self.slots and self.page_table[slot].any():
                 problems.append(f"free slot {slot} still maps pages in "
@@ -554,9 +762,14 @@ class PagedKVPool:
         self._slot_pages = [[] for _ in range(self.slots)]
         self._used_tokens = [0] * self.slots
         self._reserved = [0] * self.slots
+        self._page_refs = {}
+        self._prefix_index = {}
+        self._page_key = {}
+        self._cow_pending = [0] * self.slots
         self.page_table = np.zeros((self.slots, self.max_pages), np.int32)
         self.frees = self.allocs
         self.page_frees = self.page_allocs
+        self.ref_frees = self.ref_allocs
         self.reset_buffers()
 
     def stats(self) -> PagedPoolStats:
@@ -575,7 +788,10 @@ class PagedKVPool:
             allocs=self.allocs, frees=self.frees,
             page_allocs=self.page_allocs, page_frees=self.page_frees,
             peak_active=self.peak_active,
-            decode_arena_bytes=self.decode_arena_bytes)
+            decode_arena_bytes=self.decode_arena_bytes,
+            ref_allocs=self.ref_allocs, ref_frees=self.ref_frees,
+            cow_copies=self.cow_copies,
+            shared_attaches=self.shared_attaches)
 
 
 @dataclasses.dataclass
@@ -626,7 +842,9 @@ class ServeEngine:
                  chunk_steps: Optional[int] = None,
                  pages: Optional[int] = None,
                  device: Optional[object] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 prefix_sharing: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None):
         """Every graph the engine compiles (serve/decode step, per-length
         prefills, fused donated chunks) goes through ``options`` — so
         ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
@@ -665,6 +883,24 @@ class ServeEngine:
                     f"chunk_steps must be >= 1, got {chunk_steps}")
             self.page_size = int(page_size)
             self.chunk_steps = int(chunk_steps)
+            # PR 9 knobs: content-hash prefix sharing across requests
+            # (on by default — greedy parity is preserved by exact-value
+            # COW semantics) and in-graph chunked prefill (0 restores
+            # the legacy dense (1, P) prefill + host-side scatter).
+            # Chunk granularity is orthogonal to page size: the default
+            # spans four pages per dispatch so short prompts still
+            # prefill in one step (no schedule stretch, the request
+            # joins decode the step it was admitted) while long prompts
+            # interleave with decode rows instead of stalling them.
+            self.prefix_sharing = (True if prefix_sharing is None
+                                   else bool(prefix_sharing))
+            self.prefill_chunk = (4 * self.page_size
+                                  if prefill_chunk is None
+                                  else int(prefill_chunk))
+            if self.prefill_chunk < 0:
+                raise ValueError(
+                    f"prefill_chunk must be >= 0 (0 = dense prefill), "
+                    f"got {prefill_chunk}")
             mp = -(-self.max_len // self.page_size)
             # default pool: the worst case (every slot at max_len) plus
             # the trash page — `pages` shrinks it to create admission
@@ -683,7 +919,12 @@ class ServeEngine:
             # never silently ignore paged-only knobs in other modes
             ignored = {k: v for k, v in [("page_size", page_size),
                                          ("chunk_steps", chunk_steps),
-                                         ("pages", pages)] if v is not None}
+                                         ("pages", pages),
+                                         ("prefix_sharing", prefix_sharing),
+                                         ("prefill_chunk", prefill_chunk)]
+                       if v is not None}
+            self.prefix_sharing = False
+            self.prefill_chunk = 0
             if ignored:
                 raise ValueError(
                     f"{sorted(ignored)} need mode='paged'; mode {mode!r} "
@@ -774,6 +1015,10 @@ class ServeEngine:
         self._chunks: Dict[int, Tuple] = {}   # steps -> (graphs, compiled)
         # prompt-length -> (ModelGraphs, CompiledFunction, ordered jax params)
         self._prefill: Dict[Tuple[int, int], Tuple] = {}
+        # chunk-length -> (ModelGraphs, CompiledFunction, ordered jax
+        # params) for the in-graph paged prefill (PR 9); one entry per
+        # distinct chunk length (full chunks + ragged prompt tails)
+        self._pf_chunks: Dict[int, Tuple] = {}
 
     # -- request intake ------------------------------------------------------
     def check_request(self, prompt_len: int, max_new: int, *,
@@ -825,13 +1070,18 @@ class ServeEngine:
         """Requests submitted but not yet admitted to a slot."""
         return len(self._queue)
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt_len: int, max_new: int,
+                  prompt=None) -> bool:
         """Would a new request fit *after* everything already queued?
 
         Queue-aware: the engine's internal queue holds capacity that the
         scheduler will consume at the next step boundary, so the free
         slots/pages it is about to claim are discounted — this is the
-        admission predicate a bounded front-door wait queue maps onto."""
+        admission predicate a bounded front-door wait queue maps onto.
+        With ``prompt`` given (paged mode, prefix sharing on), prefix
+        pages the request would attach instead of allocate are credited:
+        a shared-prefix request can be admitted into a pool that could
+        not hold it privately."""
         if self.mode not in ("continuous", "paged"):
             raise RuntimeError(
                 "can_admit() is only available in continuous/paged modes")
@@ -844,8 +1094,12 @@ class ServeEngine:
             return self.pool.slots - self.pool.active - len(queued) >= 1
         held = sum(self.pool.pages_for(len(r.prompt) + r.max_new)
                    for r in queued)
+        shared = 0
+        if prompt is not None and self.prefix_sharing:
+            shared = self.pool.probe_shared(prompt)[1]
         return self.pool.can_admit(prompt_len + max_new,
-                                   held_slots=len(queued), held_pages=held)
+                                   held_slots=len(queued), held_pages=held,
+                                   shared_pages=shared)
 
     def live_stats(self) -> Dict[str, object]:
         """Instantaneous gauges for a metrics endpoint (cheap, no
@@ -864,6 +1118,8 @@ class ServeEngine:
         if self.mode == "paged":
             d["pages_in_use"] = self.pool.pages_in_use
             d["pages"] = self.pool.n_pages - 1
+            d["cow_copies"] = self.pool.cow_copies
+            d["shared_attaches"] = self.pool.shared_attaches
         return d
 
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
@@ -1055,10 +1311,24 @@ class ServeEngine:
                       *pvals)
         first = _host_sample(np.asarray(outs[0]), req.temperature,
                              req.top_k, req.key, P - 1)
+        start = 0
         if self.mode == "paged":
+            if self.prefix_sharing:
+                # attach matching prefix pages, then scatter only from
+                # the first non-shared page (COW-copying the tail page
+                # first when the whole prompt matched)
+                covered = self.pool.share_prefix(slot, req.prompt)
+                start = min(covered, P - 1)
             self.pool.ensure_pages(slot, P - 1)
+            self.pool.prepare_writes(slot, start, P - 1)
         for i, name in enumerate(g.aux.get("cache_names", [])):
-            self.pool.write_prefix(slot, name, outs[1 + i])
+            if self.mode == "paged":
+                self.pool.write_prefix(slot, name, outs[1 + i],
+                                       start_tok=start)
+            else:
+                self.pool.write_prefix(slot, name, outs[1 + i])
+        if self.mode == "paged" and self.prefix_sharing:
+            self.pool.publish_prefix(slot, req.prompt)
         req.slot = slot
         req.pos = P
         req.status = "active"
@@ -1076,6 +1346,124 @@ class ServeEngine:
 
     def _finish(self, req: Request) -> None:
         self._retire(req, "completed")
+
+    # -- in-graph chunked prefill (PR 9) -------------------------------------
+    def _defer_for_publisher(self, req: Request) -> bool:
+        """Would waiting a step let ``req`` attach more prefix pages?
+
+        True when some active, still-prefilling request shares a longer
+        full-page prefix with ``req`` than the index can offer right now
+        — it will publish those pages when its prefill completes, and a
+        deferred admission attaches them instead of caching them twice.
+        A cancelled publisher simply stops matching, so deferral can
+        never stall past the publisher's own lifetime."""
+        ps = self.pool.page_size
+        best = self.pool.probe_shared(req.prompt)[0] // ps
+        for rid in self._slot_req:
+            if rid is None:
+                continue
+            rp = self._requests[rid]
+            if rp.finished or rp.prefill_pos is None:
+                continue
+            m = min(len(rp.prompt), len(req.prompt))
+            neq = np.nonzero(rp.prompt[:m] != req.prompt[:m])[0]
+            common = m if not len(neq) else int(neq[0])
+            if common // ps > best:
+                return True
+        return False
+
+    def _paged_prefill_for(self, C: int):
+        """Compile (once per distinct chunk length) the paged prefill
+        graph: a (1, C) prompt slice written straight into the page pool,
+        cache buffers donated like the decode chunk."""
+        if C not in self._pf_chunks:
+            from ..models.lm import build_dense_paged_prefill
+            g = build_dense_paged_prefill(
+                self.cfg, self.max_len, C, page_size=self.page_size,
+                n_pages=self.n_pages)
+            step_in = ("token", "pos", "page_tbl")
+            cache_ix = tuple(i for i, n in enumerate(g.builder.inputs)
+                             if n.name not in step_in)
+            cf = self.backend.compile(
+                g.fn, self.base_options.replace(donate_argnums=cache_ix))
+            import jax.numpy as jnp
+            names = g.builder.param_names()
+            missing = [n for n in names if n not in self._jparam_map]
+            own = g.builder.init_params(self.seed) if missing else {}
+            pvals = [self._jparam_map[n] if n in self._jparam_map
+                     else jnp.asarray(own[n]) for n in names]
+            out_names = g.aux["state_out_names"]
+            recycle = [out_names.index(n) if n in out_names else None
+                       for n in self.pool.names]
+            self._pf_chunks[C] = (g, cf, pvals, recycle)
+        return self._pf_chunks[C]
+
+    def _begin_prefill(self, req: Request, slot: int) -> None:
+        """Admit ``req`` into ``slot`` for chunked prefill: attach any
+        shared prefix pages, then leave the prompt remainder to be
+        prefilled chunk-by-chunk through the step loop (so a long prompt
+        interleaves with in-flight decodes instead of stalling them).
+        The request holds its slot but emits nothing until the final
+        chunk samples its first token."""
+        P = len(req.prompt)
+        covered = (self.pool.share_prefix(slot, req.prompt)
+                   if self.prefix_sharing else 0)
+        # always re-process at least the last prompt token: its chunk
+        # produces the logits the first token is sampled from
+        req.prefill_pos = min(covered, P - 1)
+        req.slot = slot
+        req.status = "active"
+        req.t_admit = time.perf_counter()
+        self._slot_req[slot] = req.rid
+        self.pool.note_used(slot, req.prefill_pos)
+
+    def _prefill_chunk_step(self, slot: int, req: Request) -> Optional[int]:
+        """Advance ``slot``'s prefill by one chunk (one dispatch of at
+        most ``prefill_chunk`` prompt tokens).  On the chunk that
+        completes the prompt: host-sample the first token from the
+        returned last-row logits, publish the prefix pages, and hand the
+        row over to decode — returning the first token.  Returns None
+        while the prompt is still partially cached (or after a contained
+        dispatch failure)."""
+        t0 = time.perf_counter()
+        P = len(req.prompt)
+        lo = req.prefill_pos
+        hi = min(lo + self.prefill_chunk, P)
+        g, cf, pvals, recycle = self._paged_prefill_for(hi - lo)
+        self.pool.ensure_pages(slot, hi - 1)
+        self.pool.prepare_writes(slot, lo, hi - 1)
+        tok_chunk = np.ascontiguousarray(
+            req.prompt[lo:hi].reshape(1, hi - lo))
+        ptbl = np.ascontiguousarray(self.pool.page_table[slot:slot + 1])
+        try:
+            self.faults.delay("dispatch.delay")
+            self.faults.check("prefill.raise")
+            outs = cf.raw(tok_chunk, np.int32(lo), ptbl,
+                          *self.pool.buffers, *pvals)
+            logits = np.asarray(outs[0])  # (1, 1, V) — syncs the chain
+            self.pool.update([self.pool.buffers[k] if j is None
+                              else outs[1 + j]
+                              for k, j in enumerate(recycle)])
+        except Exception as exc:
+            self._contain_step_failure(exc)
+            return None
+        req.prefill_pos = hi
+        self.pool.note_used(slot, hi)
+        self.prefill_seconds += time.perf_counter() - t0
+        if hi < P:
+            return None
+        first = _host_sample(logits, req.temperature, req.top_k, req.key,
+                             P - 1)
+        if self.prefix_sharing:
+            self.pool.publish_prefix(slot, req.prompt)
+        req.prefill_pos = None
+        req.pos = P
+        req.tokens = [first]
+        req.t_first = time.perf_counter()
+        self._tok[slot, 0] = first
+        self._pos[slot] = P
+        self.pool.note_used(slot, P)
+        return first
 
     def step(self) -> List[Tuple[int, int]]:
         """One engine step: admit what fits, then one batched decode
@@ -1155,17 +1543,50 @@ class ServeEngine:
         emitted: List[Tuple[int, int]] = []
         while self._queue:
             req = self._requests[self._queue[0]]
-            if not self.pool.can_admit(len(req.prompt) + req.max_new):
+            if self.prefix_sharing and self.prefill_chunk and \
+                    self._defer_for_publisher(req):
+                # prefill dedup: a still-prefilling request is about to
+                # publish a longer matching prefix than the index holds
+                # now — admitting at the next boundary attaches those
+                # pages instead of re-prefilling them (FIFO holds behind
+                # the head, like every other admission stall)
+                break
+            shared = (self.pool.probe_shared(req.prompt)[1]
+                      if self.prefix_sharing else 0)
+            if not self.pool.can_admit(len(req.prompt) + req.max_new,
+                                       shared_pages=shared):
                 break
             self._queue.pop(0)
-            slot = self.pool.alloc(len(req.prompt) + req.max_new)
+            slot = self.pool.alloc(len(req.prompt) + req.max_new,
+                                   shared_pages=shared)
             if self._steps > 0:
                 self.late_admissions += 1
-            emitted.append((req.rid, self._admit(req, slot)))
-            if req.done:  # max_new == 1: done straight out of prefill
-                self._finish(req)
+            if self.prefill_chunk:
+                self._begin_prefill(req, slot)
+            else:
+                emitted.append((req.rid, self._admit(req, slot)))
+                if req.done:  # max_new == 1: done straight out of prefill
+                    self._finish(req)
+        # advance chunked prefills — one chunk per prefilling slot per
+        # step, so long prompts share the step loop with decode rows
+        # instead of stalling them behind one dense prefill dispatch
+        for slot, rid in enumerate(list(self._slot_req)):
+            if rid is None:
+                continue
+            req = self._requests[rid]
+            if req.finished or req.prefill_pos is None:
+                continue
+            tok = self._prefill_chunk_step(slot, req)
+            if tok is not None:
+                emitted.append((req.rid, tok))
+                if req.done:  # max_new == 1: done at prefill completion
+                    self._finish(req)
+        prefilling = [s for s, rid in enumerate(self._slot_req)
+                      if rid is not None
+                      and self._requests[rid].prefill_pos is not None]
         active = [(s, self._requests[rid])
-                  for s, rid in enumerate(self._slot_req) if rid is not None]
+                  for s, rid in enumerate(self._slot_req)
+                  if rid is not None and s not in prefilling]
         if not active:
             return emitted
         for slot, req in active:
@@ -1183,22 +1604,35 @@ class ServeEngine:
             self._topk[slot] = req.top_k
             self._key[slot] = req.key
         for s in range(self.slots):
-            if self._slot_req[s] is None:
+            if self._slot_req[s] is None or s in prefilling:
                 # idle rows decode garbage into the trash page (their
-                # page-table row is all zeros) and are ignored below
+                # page-table row is all zeros) and are ignored below;
+                # rows still mid-prefill are masked the same way in the
+                # dispatched table copy so their garbage decode writes
+                # can't corrupt the pages the prefill chunks own
                 self._pos[s] = 0
                 self._tok[s, 0] = 0
                 self._temp[s] = 0.0
                 self._topk[s] = 0
                 self._key[s] = 0
+        dispatch_tbl = self.pool.page_table
+        if prefilling:
+            dispatch_tbl = dispatch_tbl.copy()
+            dispatch_tbl[prefilling] = 0
+        # prefilling rows hold committed pages too (counted in the byte
+        # numerator), so credit their already-cached prompt rows in the
+        # token denominator — else a decode overlapping a multi-step
+        # prefill inflates kv_bytes_per_active_token
+        prefill_rows = sum(self._requests[self._slot_req[s]].prefill_pos or 0
+                           for s in prefilling)
         self._kv_sample(self.pool.committed_pages * self.pool.bytes_per_page,
-                        sum(r.pos for _, r in active))
+                        sum(r.pos for _, r in active) + prefill_rows)
         self.pool.sample_fragmentation()
         t0 = time.perf_counter()
         try:
             self.faults.delay("dispatch.delay")
             self.faults.check("dispatch.raise")
-            outs = self.cf.raw(self._tok, self._pos, self.pool.page_table,
+            outs = self.cf.raw(self._tok, self._pos, dispatch_tbl,
                                self._temp, self._topk, self._key,
                                *self.pool.buffers, *self.jparams)
             toks = np.asarray(outs[0])  # (K, B, 1) — syncs the chain

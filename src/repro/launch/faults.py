@@ -15,6 +15,10 @@ Sites (see ROADMAP "Fault tolerance (PR 8)"):
                                     decode dispatch (engine containment path)
   * ``dispatch.delay``            — sleep before a dispatch (slow-step /
                                     heartbeat exercise)
+  * ``prefill.raise``             — raise :class:`FaultError` in place of a
+                                    chunked-prefill dispatch (PR 9): same
+                                    containment path, but the failing
+                                    request may hold COW-shared pages
   * ``admit.reject``              — force ``ServeEngine.can_admit`` to say
                                     no (front-door 429 path)
   * ``client.disconnect_after_n`` — ``loadgen`` clients drop the connection
@@ -49,7 +53,7 @@ import time
 from typing import Dict, Optional
 
 SITES = ("dispatch.raise", "dispatch.delay", "admit.reject",
-         "client.disconnect_after_n")
+         "client.disconnect_after_n", "prefill.raise")
 _MODES = ("after", "first", "every", "prob", "always")
 
 ENV_SPEC = "REPRO_FAULTS"

@@ -11,7 +11,13 @@ Usage:
 ``--mode paged`` serves through the paged KV pool (``--page-size``,
 ``--chunk-steps``, ``--pages``) with in-graph sampling: ``--temperature``
 / ``--top-k`` apply to every request (0 = greedy, the default — the
-cross-mode parity baseline).
+cross-mode parity baseline).  ``--shared-prefix-len N`` makes the first
+N prompt tokens identical across requests (a shared system prompt), the
+workload the copy-on-write prefix-sharing pool collapses;
+``--no-prefix-sharing`` is the unshared baseline leg and
+``--prefill-chunk`` sizes the in-graph chunked prefill dispatches
+(0 = legacy dense prefill).  ``--report-leg`` names the report so two
+same-mode runs can coexist in the serving matrix.
 
 ``--smoke`` asserts the run is sane (tok/s > 0, pool stats consistent,
 every request fully generated) — used by the CI serving smoke step.
@@ -63,6 +69,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--pages", type=int, default=None,
                     help="paged mode: physical page-pool size (default: "
                          "worst case, slots * ceil(max_len/page_size) + 1)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="paged mode: disable copy-on-write prefix page "
+                         "sharing (the unshared baseline leg)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged mode: prompt tokens per in-graph prefill "
+                         "dispatch (default 4 pages; 0 = legacy dense "
+                         "prefill + host-side scatter)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="synthetic workload: first N prompt tokens are "
+                         "identical across requests (shared system "
+                         "prompt; 0 = fully independent prompts)")
+    ap.add_argument("--report-leg", default=None,
+                    help="leg name recorded in --report-json (default: "
+                         "the engine mode) so two same-mode reports can "
+                         "coexist in the serving matrix")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="paged mode: sampling temperature for every "
                          "request (0 = greedy argmax)")
@@ -147,24 +168,49 @@ def main(argv: Optional[List[str]] = None) -> int:
             f"mode {mode!r} decodes greedily")
     if mode != "paged" and any(v is not None for v in
                                (args.page_size, args.chunk_steps,
-                                args.pages)):
+                                args.pages, args.prefill_chunk)):
         raise SystemExit(
-            f"--page-size/--chunk-steps/--pages need --mode paged; "
-            f"mode {mode!r} uses fixed per-slot cache rows")
+            f"--page-size/--chunk-steps/--pages/--prefill-chunk need "
+            f"--mode paged; mode {mode!r} uses fixed per-slot cache rows")
+    if mode != "paged" and args.no_prefix_sharing:
+        raise SystemExit(
+            f"--no-prefix-sharing needs --mode paged; mode {mode!r} "
+            f"never shares KV pages")
+    if not 0 <= args.shared_prefix_len <= P:
+        raise SystemExit(
+            f"--shared-prefix-len {args.shared_prefix_len} must be in "
+            f"[0, --prompt-len {P}]")
     options = CompileOptions(cache_dir=args.cache_dir,
                              autotune=args.autotune)
     engine = ServeEngine(cfg, slots=args.batch, max_len=max_len,
                          mode=mode, seed=args.seed, options=options,
                          page_size=args.page_size,
                          chunk_steps=args.chunk_steps, pages=args.pages,
-                         device=args.device)
+                         device=args.device,
+                         prefix_sharing=(False if args.no_prefix_sharing
+                                         else None),
+                         prefill_chunk=args.prefill_chunk)
     if args.serve_http:
         return _serve_http(engine, args, cfg, mode, max_len)
     sampling = {}
     if mode == "paged" and (args.temperature or args.top_k):
         sampling = dict(temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(args.seed)
-    rids = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G,
+    S = args.shared_prefix_len
+    # with S == 0 this is byte-identical to the historical recipe (one
+    # rng, one sequential draw per request) so existing matrix legs and
+    # their recorded token streams are unchanged
+    shared = rng.integers(0, cfg.vocab, size=(S,)) if S else None
+    prompts = []
+    for _ in range(n_req):
+        if S == P:
+            prompts.append(shared.copy())
+        elif S:
+            prompts.append(np.concatenate(
+                [shared, rng.integers(0, cfg.vocab, size=(P - S,))]))
+        else:
+            prompts.append(rng.integers(0, cfg.vocab, size=(P,)))
+    rids = [engine.submit(prompts[i], G,
                           deadline_s=args.request_timeout,
                           **(dict(sampling, key=i) if sampling else {}))
             for i in range(n_req)]
@@ -184,6 +230,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"in_use={p.pages_in_use} peak={p.peak_pages_in_use} "
                   f"frag={p.fragmentation:.3f} "
                   f"page_allocs={p.page_allocs} page_frees={p.page_frees} "
+                  f"cow={p.cow_copies} attach={p.shared_attaches} "
                   f"arena={p.decode_arena_bytes}B")
             if rep.kv_bytes_per_active_token is not None:
                 # None: no decode dispatch ran (e.g. --gen 1 finishes
@@ -223,6 +270,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                 bound = -(-n_req * (P + G) // p.page_size) + p.slots
                 assert p.peak_pages_in_use <= bound, \
                     f"peak pages {p.peak_pages_in_use} > bound {bound}"
+                assert p.ref_allocs == p.ref_frees, \
+                    f"page-reference leak: {p.ref_allocs} ref allocs vs " \
+                    f"{p.ref_frees} ref frees"
+                bad = engine.pool.verify()
+                assert not bad, f"pool.verify() found: {bad}"
             else:
                 assert p.active == 0 and p.occupancy == 0.0, \
                     "pool must drain when all requests finish"
@@ -230,12 +282,18 @@ def main(argv: Optional[List[str]] = None) -> int:
         print("[smoke] ok")
     if args.report_json:
         doc = dataclasses.asdict(rep)
+        doc["leg"] = args.report_leg or mode
         doc["results"] = {str(r): rep.results[r].tolist() for r in rids}
         doc["workload"] = {"requests": n_req, "prompt_len": P, "gen": G,
                            "slots": args.batch, "max_len": max_len,
                            "seed": args.seed,
                            "temperature": args.temperature,
-                           "top_k": args.top_k}
+                           "top_k": args.top_k,
+                           "shared_prefix_len": S,
+                           "prefix_sharing": engine.prefix_sharing,
+                           "prefill_chunk": engine.prefill_chunk}
+        if mode == "paged":
+            doc["pool_verify"] = engine.pool.verify()
         with open(args.report_json, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
             fh.write("\n")
@@ -280,6 +338,7 @@ def _serve_http(engine, args, cfg, mode, max_len) -> int:
           f"drain_ok={srv.drain_ok}")
     if args.report_json:
         doc = srv.report_doc()
+        doc["leg"] = args.report_leg or doc.get("mode") or "server"
         doc["workload"] = {"requests": args.requests or args.batch,
                            "prompt_len": args.prompt_len, "gen": args.gen,
                            "slots": args.batch, "max_len": max_len,

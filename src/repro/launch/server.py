@@ -582,7 +582,8 @@ class ServeHTTPServer:
                     503, {"error": "server is draining"}))
                 return
             depth = len(self._pending) + self.engine.queue_depth
-            if not self.engine.can_admit(len(item.prompt), item.max_new) \
+            if not self.engine.can_admit(len(item.prompt), item.max_new,
+                                         prompt=item.prompt) \
                     and depth >= self.max_wait_queue:
                 self.stats.on_reject(429)
                 writer.write(self._resp(

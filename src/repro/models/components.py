@@ -52,20 +52,55 @@ def norm_inits(prefix: str, kind: str = "rms"):
 
 
 # -- rotary ---------------------------------------------------------------------
+def _rope_freq(d_head: int, base: float) -> np.ndarray:
+    return (base ** (-np.arange(d_head // 2, dtype=np.float64) * 2.0
+                     / d_head)).astype(np.float32)
+
+
+def _rope_host_tables(seq: int, d_head: int,
+                      base: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-evaluated (seq, d_head//2) f32 cos/sin tables.
+
+    Static-position tables are computed with numpy rather than left for
+    XLA to constant-fold: the folder and the runtime ``cos`` kernel round
+    differently (1 ulp in f32), so two compiled programs that must agree
+    bitwise on the same positions — the dense prefill graph and the
+    chunked paged-prefill graph — would otherwise write K rows that
+    disagree in the last bf16 bit and eventually flip a greedy argmax."""
+    ang = (np.arange(seq, dtype=np.float32)[:, None]
+           * _rope_freq(d_head, base)[None, :])
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
 def rope_tables(b: ModelBuilder, seq: int, d_head: int, base: float = 10000.0,
                 offset: Optional[Value] = None) -> Tuple[Value, Value]:
     """cos/sin tables (seq, d_head//2) in f32.  ``offset`` (scalar i32)
-    shifts positions for decode."""
+    shifts positions for decode.  Static tables (no offset) are baked as
+    host-computed literals (see :func:`_rope_host_tables`)."""
     half = d_head // 2
-    freq = ops.constant(
-        (base ** (-np.arange(half, dtype=np.float64) * 2.0 / d_head))
-        .astype(np.float32))  # (half,)
-    pos = ops.iota((seq,), 0, "i32")
-    if offset is not None:
-        pos = pos + ops.broadcast_to(offset, (seq,))
+    if offset is None:
+        cos, sin = _rope_host_tables(seq, d_head, base)
+        return ops.constant(cos), ops.constant(sin)
+    freq = ops.constant(_rope_freq(d_head, base))  # (half,)
+    pos = ops.iota((seq,), 0, "i32") + ops.broadcast_to(offset, (seq,))
     posf = ops.convert(pos, "f32")
     ang = ops.reshape(posf, (seq, 1)) * ops.reshape(freq, (1, half))
     return ops.cos(ang), ops.sin(ang)
+
+
+def rope_tables_sliced(b: ModelBuilder, max_len: int, d_head: int, chunk: int,
+                       base: float, offset: Value) -> Tuple[Value, Value]:
+    """``chunk`` rows of the full host-computed table starting at the
+    traced row ``offset`` — bitwise identical to the corresponding rows
+    of a static :func:`rope_tables` by construction, which is what makes
+    chunked paged prefill token-exact against dense prefill."""
+    half = d_head // 2
+    cos, sin = _rope_host_tables(max_len, d_head, base)
+    zero = ops.constant(np.int32(0))
+    return (ops.dynamic_slice(ops.constant(cos), [offset, zero],
+                              [chunk, half]),
+            ops.dynamic_slice(ops.constant(sin), [offset, zero],
+                              [chunk, half]))
 
 
 def rope_tables_rows(b: ModelBuilder, pos: Value, d_head: int,
@@ -378,6 +413,90 @@ def paged_self_attention(
     posb = ops.broadcast_to(ops.reshape(pos, (B, 1)), (B, Skv))
     att = _rowpos_attend(q, gk, gv, kpos, posb, n_heads=n_heads, n_kv=n_kv,
                          d_head=d_head, window=window)
+    out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
+    return constrain(out, BATCH_SPEC), (pool_k, pool_v)
+
+
+def _chunkpos_attend(q: Value, cache_k: Value, cache_v: Value, kpos: Value,
+                     qpos: Value, *, n_heads: int, n_kv: int, d_head: int,
+                     window: Optional[int] = None) -> Value:
+    """Masked multi-token attention over a (B, Hkv, Skv, D) key/value
+    view: query ``c`` (at absolute position ``qpos[c]``) attends keys
+    with ``kpos <= qpos[c]`` — the chunked-prefill generalization of
+    :func:`_rowpos_attend` from one query per row to ``C`` queries of one
+    row.  Numerics mirror the backend's ``reference_attention`` (what the
+    dense prefill graph's fused ``ops.attention`` runs): f32 scores,
+    -1e30 mask fill, f32 softmax, and — crucially — the probabilities
+    cast back to the cache dtype before the p·V contraction.  Masked
+    entries contribute an exact 0 to every reduction, so the padded pool
+    axis is a no-op and chunked prefill stays bitwise identical to the
+    dense prefill path (the parity the serving gates assert)."""
+    B, Hkv, Skv, D = cache_k.shape
+    Cq = q.shape[2]
+    Dv = cache_v.shape[-1]
+    rep = n_heads // n_kv
+    q5 = ops.reshape(ops.convert(q, "f32"), (B, n_kv, rep, Cq, D))
+    kf = ops.convert(cache_k, "f32")
+    scores = ops.multiply(
+        ops.einsum("bhrqd,bhkd->bhrqk", q5, kf),
+        ops.broadcast_to(ops.constant(1.0 / math.sqrt(d_head), dtype="f32"),
+                         (B, n_kv, rep, Cq, Skv)))
+    kpos3 = ops.broadcast_to(ops.reshape(kpos, (B, 1, Skv)), (B, Cq, Skv))
+    qpos3 = ops.broadcast_to(ops.reshape(qpos, (1, Cq, 1)), (B, Cq, Skv))
+    mask = ops.less_equal(kpos3, qpos3)
+    if window is not None:
+        w = ops.constant(window, dtype="i32")
+        mask = ops.logical_and(
+            mask, ops.greater(kpos3,
+                              qpos3 - ops.broadcast_to(w, (B, Cq, Skv))))
+    maskb = ops.broadcast_to(ops.reshape(mask, (B, 1, 1, Cq, Skv)),
+                             scores.shape)
+    neg = ops.broadcast_to(ops.constant(-1e30, dtype="f32"), scores.shape)
+    p = ops.softmax(ops.select(maskb, scores, neg), axis=-1)
+    att = ops.einsum("bhrqk,bhkd->bhrqd", ops.convert(p, cache_v.dtype),
+                     cache_v)
+    return ops.convert(ops.reshape(att, (B, n_heads, Cq, Dv)), q.dtype)
+
+
+def paged_prefill_attention(
+    b: ModelBuilder, x: Value, w: Dict[str, Value], *,
+    prefix: str, n_heads: int, n_kv: int, d_head: int,
+    rope: Tuple[Value, Value], pool_k: Value, pool_v: Value,
+    page_tbl: Value, pos0: Value, page_size: int,
+    window: Optional[int] = None, qkv_bias: bool = False,
+) -> Tuple[Value, Tuple[Value, Value]]:
+    """Chunked-prefill self attention through a paged KV pool.
+
+    x: (1, C, Dm) — one request's prompt chunk at absolute positions
+    ``pos0 .. pos0+C-1``; rope: the (C, half) tables built at offset
+    ``pos0``; pool_k/pool_v: (P, Hkv, ps, D) page pools; page_tbl: the
+    row's (1, MP) table.  All C rotated k/v rows are written straight
+    into the row's pages (the :func:`paged_write` one-hot blend, with
+    the chunk axis standing in for the batch axis — positions within a
+    chunk are distinct, so rows never collide), then the slot-major view
+    is gathered back and attended causally at absolute positions with
+    the same masked f32 math as the decode paths.  Earlier chunks' rows
+    (and COW-shared prefix pages) are already in the pool, so a long
+    prompt prefills chunk by chunk without a dense (1, P) cache.
+    Returns (out (1, C, Dm), (new_pool_k, new_pool_v)).
+    """
+    q, k, v = project_qkv(b, x, w, prefix, n_heads, n_kv, qkv_bias)
+    q = apply_rope(q, *rope)
+    k = apply_rope(k, *rope)
+    Cq = x.shape[1]
+    MP = page_tbl.shape[1]
+    positions = ops.broadcast_to(pos0, (Cq,)) + ops.iota((Cq,), 0, "i32")
+    ptbl_c = ops.broadcast_to(page_tbl, (Cq, MP))
+    k_rows = ops.transpose(k, (2, 1, 0, 3))      # (C, Hkv, 1, D)
+    v_rows = ops.transpose(v, (2, 1, 0, 3))
+    pool_k = paged_write(pool_k, k_rows, ptbl_c, positions, page_size)
+    pool_v = paged_write(pool_v, v_rows, ptbl_c, positions, page_size)
+    gk = paged_gather(pool_k, page_tbl)
+    gv = paged_gather(pool_v, page_tbl)
+    Skv = gk.shape[2]
+    kpos = ops.iota((1, Skv), 1, "i32")
+    att = _chunkpos_attend(q, gk, gv, kpos, positions, n_heads=n_heads,
+                           n_kv=n_kv, d_head=d_head, window=window)
     out = ops.matmul(merge_heads(att), b.cast(w[f"{prefix}wo"]))
     return constrain(out, BATCH_SPEC), (pool_k, pool_v)
 

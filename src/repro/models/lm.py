@@ -116,10 +116,19 @@ def _dense_layer_specs(cfg: ModelConfig) -> Tuple[C.Specs, Dict]:
 
 
 def _dense_block(b, cfg, h, w, rope, *, window=None, cache=None, pos=None,
-                 ring=False, return_kv=False, paged=None):
+                 ring=False, return_kv=False, paged=None, chunk=False):
     dh = cfg.head_dim
     xn = C.apply_norm(h, w, "ln1_", cfg.norm, cfg.norm_eps)
-    if paged is not None:
+    if paged is not None and chunk:
+        # chunked prefill: a (1, C) prompt slice written straight into the
+        # page pool; pos is the scalar base position of the chunk
+        page_tbl, page_size = paged
+        att, extras = C.paged_prefill_attention(
+            b, xn, w, prefix="attn_", n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=dh, rope=rope, pool_k=cache[0],
+            pool_v=cache[1], page_tbl=page_tbl, pos0=pos,
+            page_size=page_size, window=window, qkv_bias=cfg.qkv_bias)
+    elif paged is not None:
         # paged: cache is (pool_k, pool_v) page pools, paged is the
         # (page_tbl, page_size) routing pair
         page_tbl, page_size = paged
@@ -505,6 +514,73 @@ def build_dense_chunk(cfg: ModelConfig, max_len: int, batch: int,
     return ModelGraphs(cfg, "decode_chunk", fn, b,
                        {"cache_names": ["cache_k", "cache_v"],
                         "steps": steps})
+
+
+def build_dense_paged_prefill(cfg: ModelConfig, max_len: int, chunk: int, *,
+                              page_size: int,
+                              n_pages: Optional[int] = None) -> ModelGraphs:
+    """One in-graph chunked-prefill dispatch for the paged engine.
+
+    A (1, C) slice of a single request's prompt at base position ``pos``
+    writes its K/V rows straight into the shared page pool (the
+    :func:`~.components.paged_write` blend over the chunk — no dense
+    (1, P) cache, no host-side scatter) and returns the last row's
+    logits, so the final chunk of a prompt yields the request's first
+    token.  The engine admits these chunks through the same scheduler
+    step as decode rows: a long prompt no longer stalls in-flight
+    decodes for a whole dense prefill.
+
+    (token (1,C), pos (), page_tbl (1,MP),
+     cache_k (L,P,Hkv,ps,Dh), cache_v, *W) ->
+        (logits (1,1,V), cache_k', cache_v')
+
+    Rope tables are built at offset ``pos`` and attention masks on
+    absolute positions (``kpos <= pos + c``), so each row computes
+    exactly what the dense ``prefill`` graph computes for it — chunked
+    prefill is token-identical to dense prefill at every chunk size.
+    Parameters are declared in the same order and under the same names
+    as the serve/chunk builders, so the engine's existing weights bind
+    by name.
+    """
+    b = ModelBuilder(cfg.param_dtype, cfg.compute_dtype)
+    L, dh = cfg.n_layers, cfg.head_dim
+    specs, inits = _dense_layer_specs(cfg)
+    ps = int(page_size)
+    mp = -(-max_len // ps)
+    P = int(n_pages) if n_pages is not None else 1 + mp
+    Cn = int(chunk)
+    token = b.input("token", (1, Cn))
+    pos = b.input("pos", (), spec=())
+    ptbl = b.input("page_tbl", (1, mp), spec=("batch", None))
+    ck = b.input("cache_k", (L, P, cfg.n_kv_heads, ps, dh),
+                 dtype=cfg.compute_dtype, spec=PAGED_CACHE_SPEC)
+    cv = b.input("cache_v", (L, P, cfg.n_kv_heads, ps, dh),
+                 dtype=cfg.compute_dtype, spec=PAGED_CACHE_SPEC)
+    h = _embed(b, cfg, token)
+    # slice the chunk's rows out of the same host-computed table the
+    # dense prefill graph bakes in — bitwise-equal rope is what keeps
+    # chunked prefill token-identical to dense prefill
+    cos, sin = C.rope_tables_sliced(b, max_len, dh, Cn, cfg.rope_base, pos)
+
+    def body(carries, w, consts):
+        hh, ex = _dense_block(
+            b, cfg, carries[0], w, (consts[0], consts[1]),
+            window=cfg.window, cache=(w["cache_k"], w["cache_v"]),
+            pos=consts[2], paged=(consts[3], ps), chunk=True)
+        return [hh], list(ex)
+
+    (h,), ys = b.scan_blocks(
+        "layers", cfg.n_layers, specs, body, [h],
+        consts=[cos, sin, pos, ptbl],
+        xs_extra={"cache_k": ck, "cache_v": cv},
+        n_ys=2, weight_inits=inits)
+    logits = _final_logits(b, cfg, h, last_only=True)
+    fn = b.finish([logits, ys[0], ys[1]], f"{cfg.name}_paged_prefill{Cn}")
+    return ModelGraphs(cfg, "prefill_paged", fn, b,
+                       {"cache_names": ["cache_k", "cache_v"],
+                        "state_out_names": ["cache_k", "cache_v"],
+                        "page_size": ps, "max_pages": mp, "n_pages": P,
+                        "chunk": Cn})
 
 
 # =============================================================================

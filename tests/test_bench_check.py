@@ -112,11 +112,37 @@ def _chaos_report(**over):
     doc = {"mode": "chaos", "results": {},
            "scenarios": {name: dict(scenario) for name in
                          ("dispatch_failure", "deadline_expiry",
-                          "disconnect_storm", "cancel")},
+                          "disconnect_storm", "cancel",
+                          "shared_prefix_storm")},
            "counters": {"cancelled": 4, "deadline_exceeded": 1,
                         "failed": 1, "engine_errors": 1, "completed": 3}}
     doc.update(over)
     return doc
+
+
+def _shared_reports():
+    """The PR 9 shared-prefix pair: one shared-prompt workload run twice
+    on the paged engine — --no-prefix-sharing (base) vs COW sharing on.
+    Keyed apart by ``leg``; excluded from the cross-mode greedy parity
+    loop by ``workload.shared_prefix_len`` (different prompts)."""
+    res = {"0": [11, 12], "1": [11, 13], "2": [11, 14]}
+    wl = {"requests": 3, "prompt_len": 16, "gen": 4, "slots": 3,
+          "temperature": 0.0, "top_k": 0, "shared_prefix_len": 16}
+    base = {"mode": "paged", "leg": "paged-shared-base", "results": res,
+            "kv_bytes_per_active_token": 585.1,
+            "pool": _paged_pool(page_allocs=15, page_frees=15, slots=3,
+                                peak_pages_in_use=15),
+            "workload": dict(wl)}
+    shared = {"mode": "paged", "leg": "paged-shared-prefix",
+              "results": res,
+              "kv_bytes_per_active_token": 346.2,
+              "pool": _paged_pool(page_allocs=7, page_frees=7, slots=3,
+                                  peak_pages_in_use=7, cow_copies=2,
+                                  shared_attaches=8, ref_allocs=15,
+                                  ref_frees=15),
+              "pool_verify": [],
+              "workload": dict(wl)}
+    return base, shared
 
 
 def test_serving_matrix_gate(tmp_path):
@@ -124,11 +150,14 @@ def test_serving_matrix_gate(tmp_path):
     + HTTP-front-door drain + chaos-leg recovery contract over the
     report artifacts, with readable failures."""
     res = {"0": [1, 2, 3], "1": [4, 5, 6], "2": [7, 8, 9]}
+    sbase, sshared = _shared_reports()
     good = {
         "cont": _report("continuous", res, kv=1365.0),
         "don": _report("donated", res),
         "paged": _report("paged", res, pool=_paged_pool(), kv=930.0),
         "server": _server_report(res),
+        "sbase": sbase,
+        "sshared": sshared,
         "chaos": _chaos_report(),
     }
     paths = {}
@@ -197,6 +226,57 @@ def test_serving_matrix_gate(tmp_path):
                                     "requests_completed": 3})))
     r = _matrix(*paths.values())
     assert r.returncode == 1 and "ttft_p95_ms" in r.stderr
+    (tmp_path / "server.json").write_text(json.dumps(good["server"]))
+
+    # dropping either half of the shared-prefix pair must fail — the
+    # COW gate needs both the sharing-on and --no-prefix-sharing legs
+    r = _matrix(*(p for n, p in paths.items() if n != "sshared"))
+    assert r.returncode == 1 and "shared-prefix legs missing" in r.stderr
+
+    # sharing must be invisible to greedy outputs: a token diverging
+    # from the unshared baseline means COW corrupted a page
+    div = json.loads(json.dumps(good["sshared"]))
+    div["results"]["1"] = [11, 99]
+    (tmp_path / "sshared.json").write_text(json.dumps(div))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "COW sharing must be invisible" in r.stderr
+
+    # a sharing leg whose counters never moved proves the workload
+    # never actually shared (or never diverged into a copy)
+    idle = json.loads(json.dumps(good["sshared"]))
+    idle["pool"]["shared_attaches"] = 0
+    idle["pool"]["cow_copies"] = 0
+    (tmp_path / "sshared.json").write_text(json.dumps(idle))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1
+    assert "attached a shared prefix" in r.stderr
+    assert "copy-on-write" in r.stderr
+
+    # refcount imbalance / a dirty verify() must fail even with parity
+    torn = json.loads(json.dumps(good["sshared"]))
+    torn["pool"]["ref_frees"] = torn["pool"]["ref_allocs"] - 1
+    torn["pool_verify"] = ["page 3 refcount 1 but unreferenced"]
+    (tmp_path / "sshared.json").write_text(json.dumps(torn))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1
+    assert "page-reference" in r.stderr and "verify()" in r.stderr
+
+    # and sharing must actually save reserved KV bytes vs the baseline
+    fat = json.loads(json.dumps(good["sshared"]))
+    fat["kv_bytes_per_active_token"] = good["sbase"][
+        "kv_bytes_per_active_token"]
+    (tmp_path / "sshared.json").write_text(json.dumps(fat))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "unshared" in r.stderr
+    (tmp_path / "sshared.json").write_text(json.dumps(good["sshared"]))
+
+    # the chaos leg must cover the shared-prefix cancel storm
+    thin = _chaos_report()
+    del thin["scenarios"]["shared_prefix_storm"]
+    (tmp_path / "chaos.json").write_text(json.dumps(thin))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1
+    assert "'shared_prefix_storm' missing" in r.stderr
 
 
 def test_autotune_dir_validation(tmp_path):

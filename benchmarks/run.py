@@ -24,6 +24,11 @@
                     dispatch-failure containment — every scenario must
                     leave pages_in_use == 0 and keep token parity for
                     the uninjected survivor
+  E17 partition   — tensor-parallel paged serving (PartitionGraph +
+                    shard_map) on a 2-device CPU mesh: tp=2 vs tp=1
+                    decode tok/s, per-device KV bytes (must halve),
+                    greedy token parity, and the collective census the
+                    partition pass reports
 
 Output: ``section,name,value,unit`` CSV lines (stdout), suitable for
 diffing across commits; rows also accumulate in ``ROWS`` so
@@ -489,7 +494,7 @@ def bench_serving():
     so its p50/p95 is the time-to-token of that chunk — donated trades
     tail latency for throughput, and the rows show exactly that."""
     from repro.configs import get_config
-    from repro.launch.engine import ServeEngine
+    from repro.launch.engine import EngineConfig, ServeEngine
 
     cfg = get_config("deepseek-7b").reduced()
     SLOTS, P, G = 4, 16, 48
@@ -497,7 +502,8 @@ def bench_serving():
     prompts = [rng.integers(0, cfg.vocab, size=(P,)) for _ in range(SLOTS)]
 
     def run_mode(mode, n_req=SLOTS, warm=False):
-        eng = ServeEngine(cfg, slots=SLOTS, max_len=P + G, mode=mode, seed=0)
+        eng = ServeEngine(cfg, EngineConfig(
+            mode=mode, slots=SLOTS, max_len=P + G, seed=0))
         for i in range(n_req):
             eng.submit(prompts[i % SLOTS], G)
         rep = eng.run()
@@ -523,8 +529,8 @@ def bench_serving():
     # run where it is alone in the engine (slot sharing leaks nothing)
     alone_ok = True
     for i in range(SLOTS):
-        eng = ServeEngine(cfg, slots=SLOTS, max_len=P + G,
-                          mode="continuous", seed=0)
+        eng = ServeEngine(cfg, EngineConfig(
+            mode="continuous", slots=SLOTS, max_len=P + G, seed=0))
         rid = eng.submit(prompts[i], G)
         alone_ok &= np.array_equal(eng.run().results[rid],
                                    reps["continuous"].results[i])
@@ -561,7 +567,7 @@ def bench_paged():
     greedy token parity (the paged graph's in-graph sampler at
     temperature 0 must reproduce continuous mode exactly)."""
     from repro.configs import get_config
-    from repro.launch.engine import ServeEngine
+    from repro.launch.engine import EngineConfig, ServeEngine
 
     cfg = get_config("deepseek-7b").reduced()
     SLOTS, MAX_LEN, PS, K = 4, 64, 8, 4
@@ -572,8 +578,8 @@ def bench_paged():
                              (4, 8), (8, 24)]]
 
     def run_mode(mode, warm=False, **kw):
-        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode=mode,
-                          seed=0, **kw)
+        eng = ServeEngine(cfg, EngineConfig(
+            mode=mode, slots=SLOTS, max_len=MAX_LEN, seed=0, **kw))
         rids = [eng.submit(p, g) for p, g in workload]
         rep = eng.run()
         if not warm:
@@ -623,15 +629,16 @@ def bench_server():
     and a graceful drain that returns every KV page."""
     from repro.configs import get_config
     from repro.launch import loadgen
-    from repro.launch.engine import ServeEngine
+    from repro.launch.engine import EngineConfig, ServeEngine
     from repro.launch.server import running_server
 
     cfg = get_config("deepseek-7b").reduced()
     SLOTS, P, G, CLIENTS = 2, 8, 24, 6
 
     def make_engine():
-        return ServeEngine(cfg, slots=SLOTS, max_len=P + G, mode="paged",
-                           seed=0, page_size=8, chunk_steps=4)
+        return ServeEngine(cfg, EngineConfig(
+            mode="paged", slots=SLOTS, max_len=P + G, seed=0,
+            page_size=8, chunk_steps=4))
 
     prompts = loadgen.make_prompts(CLIENTS, P, cfg.vocab, seed=0)
     # the direct-engine reference: parity baseline + compile/XLA warm-up
@@ -683,7 +690,7 @@ def bench_faults():
         kills) the engine, which then serves a fresh request exactly.
     """
     from repro.configs import get_config
-    from repro.launch.engine import ServeEngine
+    from repro.launch.engine import EngineConfig, ServeEngine
     from repro.launch.faults import FaultInjector
 
     cfg = get_config("deepseek-7b").reduced()
@@ -693,8 +700,9 @@ def bench_faults():
     pb = rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
 
     def make_engine(faults=None):
-        return ServeEngine(cfg, slots=2, max_len=40, mode="paged", seed=0,
-                           page_size=4, chunk_steps=1, faults=faults)
+        return ServeEngine(cfg, EngineConfig(
+            mode="paged", slots=2, max_len=40, seed=0,
+            page_size=4, chunk_steps=1), faults=faults)
 
     solo = make_engine()
     rs = solo.submit(pb, G)
@@ -763,7 +771,7 @@ def bench_prefix():
     prompt admitted mid-decode stalls a short victim's inter-token p95
     for one whole dense prefill, vs one bounded chunk at a time."""
     from repro.configs import get_config
-    from repro.launch.engine import ServeEngine
+    from repro.launch.engine import EngineConfig, ServeEngine
 
     cfg = get_config("deepseek-7b").reduced()
     SLOTS, P, G, PS, MAX_LEN = 3, 32, 8, 4, 40
@@ -771,9 +779,9 @@ def bench_prefix():
     prompt = rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
 
     def run_paged(sharing, warm=False, **kw):
-        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode="paged",
-                          seed=0, page_size=PS, chunk_steps=2,
-                          prefix_sharing=sharing, **kw)
+        eng = ServeEngine(cfg, EngineConfig(
+            mode="paged", slots=SLOTS, max_len=MAX_LEN, seed=0,
+            page_size=PS, chunk_steps=2, prefix_sharing=sharing, **kw))
         rids = [eng.submit(prompt, G) for _ in range(SLOTS)]
         rep = eng.run()
         assert eng.pool.verify() == [] and rep.pool.pages_in_use == 0, \
@@ -783,12 +791,13 @@ def bench_prefix():
     run_paged(True, warm=True)  # compile + XLA warm
     srids, srep = run_paged(True)
     urids, urep = run_paged(False)
-    cont = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN,
-                       mode="continuous", seed=0)
+    cont = ServeEngine(cfg, EngineConfig(
+        mode="continuous", slots=SLOTS, max_len=MAX_LEN, seed=0))
     crids = [cont.submit(prompt, G) for _ in range(SLOTS)]
     crep = cont.run()
-    alone = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, mode="paged",
-                        seed=0, page_size=PS, chunk_steps=2)
+    alone = ServeEngine(cfg, EngineConfig(
+        mode="paged", slots=SLOTS, max_len=MAX_LEN, seed=0,
+        page_size=PS, chunk_steps=2))
     arid = alone.submit(prompt, G)
     aref = alone.run().results[arid]
     parity = all(
@@ -820,9 +829,9 @@ def bench_prefix():
     # included) and the legacy dense path decode the same tokens
     chunk_ok = True
     for chunk in (5, 16, 0):
-        eng = ServeEngine(cfg, slots=1, max_len=MAX_LEN, mode="paged",
-                          seed=0, page_size=PS, chunk_steps=2,
-                          prefill_chunk=chunk)
+        eng = ServeEngine(cfg, EngineConfig(
+            mode="paged", slots=1, max_len=MAX_LEN, seed=0,
+            page_size=PS, chunk_steps=2, prefill_chunk=chunk))
         rid = eng.submit(prompt, G)
         chunk_ok &= np.array_equal(eng.run().results[rid], aref)
     emit("E16_prefix", "prefix_chunked_prefill_parity", int(chunk_ok),
@@ -837,10 +846,10 @@ def bench_prefix():
 
     def stall_p95(prefill_chunk):
         def once():
-            eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, mode="paged",
-                              seed=0, page_size=PS, chunk_steps=1,
-                              prefix_sharing=False,
-                              prefill_chunk=prefill_chunk)
+            eng = ServeEngine(cfg, EngineConfig(
+                mode="paged", slots=2, max_len=MAX_LEN, seed=0,
+                page_size=PS, chunk_steps=1, prefix_sharing=False,
+                prefill_chunk=prefill_chunk))
             rv = eng.submit(victim, 24)
             arrivals = []
             intruded = False
@@ -860,6 +869,111 @@ def bench_prefix():
 
     emit("E16_prefix", "prefix_stall_p95_ms_chunked", stall_p95(PS), "ms")
     emit("E16_prefix", "prefix_stall_p95_ms_dense", stall_p95(0), "ms")
+
+
+_PARTITION_CHILD = r"""
+import json
+import sys
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.engine import EngineConfig, ServeEngine
+
+cfg = get_config("deepseek-7b").reduced()
+SLOTS, P, G, MAX_LEN = 4, 16, 24, 48
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
+           for _ in range(SLOTS)]
+
+
+def run(tp):
+    eng = ServeEngine(cfg, EngineConfig(
+        mode="paged", slots=SLOTS, max_len=MAX_LEN, seed=0,
+        page_size=8, chunk_steps=4, tp=tp))
+    for p in prompts:
+        eng.submit(p, G)
+    return eng.run(), eng
+
+
+for tp in (1, 2):          # compile + XLA warm (Backend.create memoizes)
+    run(tp)
+r1, e1 = run(1)
+r2, e2 = run(2)
+parity = all(np.array_equal(r1.results[k], r2.results[k])
+             for k in r1.results)
+assert r2.pool.pages_in_use == 0 and e2.pool.verify() == []
+st = e2.cf.report.stats.get("partition") or {}
+print(json.dumps({
+    "tp1_decode_tok_s": r1.decode_tok_s,
+    "tp2_decode_tok_s": r2.decode_tok_s,
+    "tp2_matches_tp1": int(parity),
+    "kv_bytes_per_device_tp1": r1.kv_bytes_per_device,
+    "kv_bytes_per_device_tp2": r2.kv_bytes_per_device,
+    "partition_all_gather": st.get("all_gather", 0),
+    "partition_all_reduce": st.get("all_reduce", 0),
+    "partition_params_sharded": st.get("params_sharded", 0),
+    "partition_scan_bodies": st.get("scan_bodies", 0),
+}))
+"""
+
+
+def bench_partition():
+    """E17: tensor-parallel paged serving over the partition pass.
+
+    Runs in a fresh subprocess so ``XLA_FLAGS`` can materialize a
+    2-device CPU mesh regardless of how this harness was launched.  The
+    child serves the same greedy workload at tp=1 and tp=2 and reports
+    decode tok/s, per-device KV bytes (each device holds n_kv_heads/tp
+    heads of every page, so bytes/device must be exactly half), token
+    parity, and the collective counts the PartitionGraph pass recorded
+    (``PipelineReport.stats["partition"]``).  On host CPU the tp=2 leg
+    pays collective overhead rather than gaining speed — the row pair is
+    a memory/parity claim, not a CPU speedup claim."""
+    import subprocess
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _PARTITION_CHILD],
+                         env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError(f"partition bench child failed:\n{out.stderr}")
+    vals = json.loads(out.stdout.strip().splitlines()[-1])
+    emit("E17_partition", "tp1_decode_tok_s",
+         vals["tp1_decode_tok_s"], "tok/s")
+    emit("E17_partition", "tp2_decode_tok_s",
+         vals["tp2_decode_tok_s"], "tok/s")
+    emit("E17_partition", "tp2_over_tp1_decode",
+         vals["tp2_decode_tok_s"] / max(vals["tp1_decode_tok_s"], 1e-9),
+         "x")
+    emit("E17_partition", "tp2_matches_tp1", vals["tp2_matches_tp1"],
+         "bool")
+    assert vals["tp2_matches_tp1"] == 1, \
+        "tp=2 greedy output diverged from tp=1"
+    emit("E17_partition", "kv_bytes_per_device_tp1",
+         vals["kv_bytes_per_device_tp1"], "B")
+    emit("E17_partition", "kv_bytes_per_device_tp2",
+         vals["kv_bytes_per_device_tp2"], "B")
+    ratio = (vals["kv_bytes_per_device_tp2"]
+             / vals["kv_bytes_per_device_tp1"])
+    emit("E17_partition", "kv_bytes_per_device_ratio", ratio, "x")
+    assert ratio <= 0.5, \
+        f"tp=2 must halve per-device KV bytes, got {ratio:.3f}x"
+    emit("E17_partition", "partition_all_gather",
+         vals["partition_all_gather"], "nodes")
+    emit("E17_partition", "partition_all_reduce",
+         vals["partition_all_reduce"], "nodes")
+    emit("E17_partition", "partition_params_sharded",
+         vals["partition_params_sharded"], "params")
+    emit("E17_partition", "partition_scan_bodies",
+         vals["partition_scan_bodies"], "bodies")
+    assert vals["partition_all_gather"] >= 1 \
+        and vals["partition_params_sharded"] >= 1, \
+        "partition pass reported no sharding work"
 
 
 def bench_scaling():
@@ -924,6 +1038,7 @@ SECTIONS = {
     "paged": bench_paged,
     "server": bench_server,
     "prefix": bench_prefix,
+    "partition": bench_partition,
     "autotune": bench_autotune,
     "kernels": bench_kernels,
     "faults": bench_faults,

@@ -21,7 +21,11 @@ counter moved, and the containment/reclaim/parity invariants all == 1,
 and the prefix section (E16) must show the shared-prefix headline
 (``prefix_kv_bytes_ratio <= 0.6`` with both parity invariants == 1, a
 copy-on-write actually fired, and the chunked/dense prefill-stall p95
-rows present).
+rows present), and the partition section (E17) must show the
+tensor-parallel serving contract (tp=2 greedy parity == 1,
+``kv_bytes_per_device_ratio <= 0.5``, and the partition pass's
+collective census with at least one all-gather and one sharded
+parameter).
 Every failure is a
 readable ``CHECK FAIL`` line naming
 what is missing vs what is present (hand-edited snapshots must produce a
@@ -111,6 +115,20 @@ REQUIRED_PREFIX_ROWS = (
     "prefix_cow_copies", "prefix_shared_attaches",
     "prefix_parity", "prefix_chunked_prefill_parity",
     "prefix_stall_p95_ms_chunked", "prefix_stall_p95_ms_dense",
+)
+# E17: tensor-parallel paged serving via the partition pass.  Per-device
+# KV bytes must be exactly half of the single-device pool (each device
+# holds n_kv_heads/tp heads of every page), tp=2 greedy outputs must be
+# token-identical to tp=1, and the partition pass must report real work
+# (sharded params + inserted all-gathers).  ``partition_all_reduce`` is
+# deliberately NOT required positive: the "tp" profile is column-parallel
+# -only (no split contractions), which is how bit-exact parity is kept.
+REQUIRED_PARTITION_ROWS = (
+    "tp1_decode_tok_s", "tp2_decode_tok_s",
+    "tp2_matches_tp1",
+    "kv_bytes_per_device_tp1", "kv_bytes_per_device_tp2",
+    "kv_bytes_per_device_ratio",
+    "partition_all_gather", "partition_params_sharded",
 )
 
 
@@ -290,6 +308,19 @@ def check(path: str) -> int:
             errors.append(f"prefix row prefix_cow_copies must be >= 1 "
                           f"(the workload must exercise a copy-on-write), "
                           f"got {cow}")
+    if "partition" in (doc.get("sections") or []):
+        vals = require("partition", "E17_partition",
+                       REQUIRED_PARTITION_ROWS)
+        parity = vals.get("tp2_matches_tp1")
+        if parity is not None and parity != 1:
+            errors.append(f"partition row tp2_matches_tp1 must be 1 "
+                          f"(tp=2 greedy decode is token-identical to "
+                          f"tp=1), got {parity}")
+        ratio = vals.get("kv_bytes_per_device_ratio")
+        if ratio is not None and ratio > 0.5:
+            errors.append(f"partition row kv_bytes_per_device_ratio must "
+                          f"be <= 0.5 (each device holds n_kv_heads/tp "
+                          f"heads of every KV page), got {ratio}")
     if errors:
         for e in errors:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
@@ -329,7 +360,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["serving", "paged", "server", "kernels",
-                             "faults", "prefix"])
+                             "faults", "prefix", "partition"])
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     ap.add_argument("--check", metavar="FILE",
                     help="validate an existing snapshot instead of running")

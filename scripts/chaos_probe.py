@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch import faults, loadgen
-from repro.launch.engine import ServeEngine
+from repro.launch.engine import EngineConfig, ServeEngine
 from repro.launch.faults import FaultInjector
 from repro.launch.server import running_server
 
@@ -51,8 +51,9 @@ P, G = 4, 8
 def _engine(slots=2, max_len=16, injector=None, **kw):
     kw.setdefault("page_size", 4)
     kw.setdefault("chunk_steps", 1)
-    return ServeEngine(CFG, slots=slots, max_len=max_len, mode="paged",
-                       seed=0, faults=injector, **kw)
+    conf = EngineConfig(mode="paged", slots=slots, max_len=max_len,
+                        seed=0, **kw)
+    return ServeEngine(CFG, conf, faults=injector)
 
 
 def _prompts(n: int) -> List[np.ndarray]:

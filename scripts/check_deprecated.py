@@ -9,6 +9,10 @@ outside that package (or this script) still:
   * calls ``get_transformer(...)``            (the deprecated entry), or
   * reaches into ``emit_callable``/``EmitCtx`` (the raw emission internals).
 
+PR 10 adds the sharding-API consolidation: ``runtime/distributed.py``,
+``launch/shardings.py`` and ``launch/mesh.py`` are one-release shims over
+``repro.backend.sharding`` — in-repo code must import the new module.
+
 Usage: python scripts/check_deprecated.py  (exit 0 = clean)
 """
 import os
@@ -26,6 +30,15 @@ BANNED = [
      "CompileOptions(static_jit=False)).raw"),
     (re.compile(r"\bEmitCtx\s*\("),
      "EmitCtx(...) — use CompileOptions"),
+    (re.compile(r"\bruntime\.distributed\b|from\s+\.\.?runtime\s+import\s+"
+                r"[^#\n]*\bdistributed\b"),
+     "runtime.distributed — import repro.backend.sharding"),
+    (re.compile(r"\blaunch\.shardings\b|from\s+\.\s*import\s+"
+                r"[^#\n]*\bshardings\b|from\s+\.shardings\s+import"),
+     "launch.shardings — import repro.backend.sharding"),
+    (re.compile(r"\blaunch\.mesh\b|from\s+\.\s*import\s+[^#\n]*\bmesh\b"
+                r"|from\s+\.mesh\s+import"),
+     "launch.mesh — import repro.backend.sharding"),
 ]
 
 ALLOWED = {
@@ -37,6 +50,12 @@ ALLOWED = {
     os.path.join("scripts", "check_deprecated.py"),
     # exercises the deprecation shim on purpose
     os.path.join("tests", "test_backend_api.py"),
+    # the one-release sharding shims themselves, and the test that
+    # asserts they still re-export with a DeprecationWarning
+    os.path.join("src", "repro", "runtime", "distributed.py"),
+    os.path.join("src", "repro", "launch", "shardings.py"),
+    os.path.join("src", "repro", "launch", "mesh.py"),
+    os.path.join("tests", "test_sharding_api.py"),
 }
 
 

@@ -32,6 +32,12 @@ contract the modes share:
     token, and released every refcounted page on drain
     (``pages_in_use == 0``, ``ref_allocs == ref_frees``,
     ``pool_verify`` empty);
+  * the tensor-parallel leg (``--report-leg paged-tp2``, a ``--tp 2``
+    paged run on the standard greedy workload under a forced 2-device
+    CPU mesh) joined the cross-mode token-parity group unchanged,
+    drained its (globally addressed, kv_heads-sharded) page pool
+    cleanly, and recorded ``kv_bytes_per_device`` at exactly half the
+    global pool bytes;
   * the chaos leg (``mode == "chaos"``, written by
     ``scripts/chaos_probe.py``) ran every fault-injection scenario
     green, and the ``cancelled`` / ``deadline_exceeded`` /
@@ -145,6 +151,41 @@ def check(paths) -> int:
             errors.append(
                 f"paged reserved {pb:.1f} KV B/active-token — not "
                 f"strictly fewer than continuous's {cb:.1f}")
+
+    tp2 = reports.get("paged-tp2")
+    if tp2 is None:
+        errors.append(
+            f"no paged-tp2 report among {sorted(reports)} — the matrix "
+            f"must exercise tensor-parallel paged serving "
+            f"(serve --mode paged --tp 2 --report-leg paged-tp2 under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+    else:
+        # the leg runs the standard greedy workload, so the parity gate
+        # above already pinned its token streams to continuous/paged;
+        # here we check the tensor-parallel contract itself
+        if tp2.get("tp") != 2 or tp2.get("workload", {}).get("tp") != 2:
+            errors.append(
+                f"paged-tp2: report tp={tp2.get('tp')!r} / workload "
+                f"tp={tp2.get('workload', {}).get('tp')!r} — the leg "
+                f"must actually run with --tp 2")
+        pool = tp2.get("pool") or {}
+        if pool.get("pages_in_use") != 0:
+            errors.append(
+                f"paged-tp2: {pool.get('pages_in_use')} pages still in "
+                f"use after drain (leak)")
+        if pool.get("page_allocs") != pool.get("page_frees"):
+            errors.append(
+                f"paged-tp2: page_allocs {pool.get('page_allocs')} != "
+                f"page_frees {pool.get('page_frees')} (leak)")
+        if tp2.get("pool_verify"):
+            errors.append(
+                f"paged-tp2: pool.verify() found {tp2['pool_verify']}")
+        kvd, tot = tp2.get("kv_bytes_per_device"), pool.get("total_bytes")
+        if not kvd or not tot or kvd * 2 != tot:
+            errors.append(
+                f"paged-tp2: kv_bytes_per_device {kvd!r} must be exactly "
+                f"half the global pool's total_bytes {tot!r} (each device "
+                f"holds n_kv_heads/2 heads of every page)")
 
     shared = reports.get("paged-shared-prefix")
     sbase = reports.get("paged-shared-base")

@@ -27,8 +27,8 @@ from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.models.lm import build_graphs
 from repro.models.train_graph import make_train_step
-from repro.launch.mesh import make_production_mesh
-from repro.launch.shardings import train_step_shardings, graph_shardings
+from repro.backend.sharding import (graph_shardings, make_production_mesh,
+                                    train_step_shardings)
 
 cfg = get_config(arch)
 sh = SHAPES[shape]

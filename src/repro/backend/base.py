@@ -176,7 +176,8 @@ class Backend:
             fn, level, compress_grads=options.compress_grads,
             fuse={"swiglu": options.fuse_swiglu,
                   "norm_matmul": options.fuse_norm_matmul,
-                  "rotary_qkv": options.fuse_rotary_qkv})
+                  "rotary_qkv": options.fuse_rotary_qkv},
+            partition=self._partition_pass(options))
         call, raw, lower = self._codegen(opt_fn, options)
         compiled = CompiledFunction(
             opt_fn, call, backend=self.name, options=options,
@@ -188,6 +189,23 @@ class Backend:
                 memory_plan=compiled.memory_plan, cost=compiled.cost,
                 executable=self._export_executable(compiled, options))
         return compiled
+
+    def _partition_pass(self, options: CompileOptions):
+        """The configured PartitionGraph pass for these options (None when
+        not partitioning).  ``mode='shardmap'`` cuts the graph explicitly;
+        ``mode='pjit'`` leaves partitioning to GSPMD via the policy's
+        shardings, so no pass runs there."""
+        if options.partition is None or options.mode != "shardmap":
+            return None
+        from ..core.passes import PartitionGraph
+        from .sharding import mesh_axis_sizes, partition_profile
+        profile = partition_profile(options.partition)
+        if options.mesh_shape is not None:
+            sizes = profile.axis_sizes(options.mesh_shape)
+        else:
+            sizes = {a: n for a, n in mesh_axis_sizes(options.mesh).items()
+                     if a in profile.axes}
+        return PartitionGraph.from_profile_sizes(profile, sizes)
 
     def _from_entry(self, entry: Dict, options: CompileOptions,
                     signature: str) -> Optional[CompiledFunction]:

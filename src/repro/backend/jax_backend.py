@@ -93,6 +93,9 @@ class JaxBackend(Backend):
                       mm_bk=options.mm_bk,
                       axis_rules=options.axis_rules)
         run = emit_callable(fn, ctx)
+        mesh = self._shardmap_mesh(fn, options)
+        if mesh is not None:
+            run = self._wrap_shard_map(run, fn, mesh)
         lower = None
         if options.static_jit:
             kw = {}
@@ -100,7 +103,8 @@ class JaxBackend(Backend):
                 kw["in_shardings"] = options.in_shardings
             if options.out_shardings is not None:
                 kw["out_shardings"] = options.out_shardings
-            if self.device is not None and "out_shardings" not in kw:
+            if self.device is not None and "out_shardings" not in kw \
+                    and mesh is None:
                 # pin via a single-device output sharding (the supported
                 # spelling — jit's `device=` kwarg is deprecated): inputs
                 # follow the outputs' placement, so donated KV chains
@@ -114,6 +118,58 @@ class JaxBackend(Backend):
             return [np.asarray(o) for o in run(*args)]
 
         return call, run, lower
+
+    @staticmethod
+    def _shardmap_mesh(fn: Function, options: CompileOptions):
+        """The mesh to shard_map a partitioned graph over, or None.
+
+        Active only when the PartitionGraph pass actually ran (parameters
+        carry ``pspec`` attrs) — plain ``mode='shardmap'`` compiles with
+        hand-written collectives (tests, manual wraps) are left alone."""
+        if options.mode != "shardmap":
+            return None
+        if not any("pspec" in p.attrs for p in fn.parameters):
+            return None
+        from .sharding import mesh_for_options
+        return mesh_for_options(options)
+
+    @staticmethod
+    def _wrap_shard_map(run: Callable, fn: Function, mesh):
+        """Wrap the emitted callable in shard_map with the specs the
+        partition pass stamped on the graph.  Callers keep passing global
+        arrays; jit splits them per ``in_specs`` (and donation keeps the
+        sharded KV chain device-resident across dispatches)."""
+        from jax.sharding import PartitionSpec
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:  # newer jax spells it jax.shard_map
+            from jax import shard_map
+
+        def spec_of(p):
+            ps = p.attrs.get("pspec") or (None,) * len(p.out_types[0].shape)
+            return PartitionSpec(*ps)
+
+        in_specs = tuple(spec_of(p) for p in fn.parameters)
+        out_specs = []
+        for r in fn.results:
+            ps = r.node.attrs.get("out_pspecs")
+            spec = ps[r.index] if ps else (None,) * len(r.shape)
+            out_specs.append(PartitionSpec(*spec))
+
+        def as_tuple(*args):
+            return tuple(run(*args))
+
+        try:
+            wrapped = shard_map(as_tuple, mesh=mesh, in_specs=in_specs,
+                                out_specs=tuple(out_specs), check_rep=False)
+        except TypeError:  # check_rep renamed/removed
+            wrapped = shard_map(as_tuple, mesh=mesh, in_specs=in_specs,
+                                out_specs=tuple(out_specs))
+
+        def as_list(*args):
+            return list(wrapped(*args))
+
+        return as_list
 
     # -- persistent-cache AOT hooks ------------------------------------------
     def _exportable(self, options: CompileOptions) -> bool:

@@ -42,6 +42,15 @@ class CompileOptions:
     mode: str = "jit"                    # 'jit' | 'shardmap' | 'pjit'
     mesh: Any = None                     # jax Mesh (pjit mode)
     axis_rules: Any = None               # logical axis -> mesh axes
+    # graph partitioning (PR 10): `partition` names a profile from
+    # repro.backend.sharding (e.g. 'tp'); with mode='shardmap' the
+    # PartitionGraph pass cuts the graph and inserts explicit collective
+    # nodes, with mode='pjit' the profile's policy derives in_shardings/
+    # axis_rules so callers never hand-build them.  `mesh_shape` sizes
+    # the device mesh (axis names come from the profile) when no `mesh`
+    # object is passed — being plain ints, it disk-caches.
+    partition: Optional[str] = None
+    mesh_shape: Optional[Tuple[int, ...]] = None
     use_pallas: bool = False             # compound ops as Pallas kernels
     interpret_pallas: bool = True        # Pallas interpret mode (CPU-safe)
     remat_scan: bool = False             # checkpoint scan bodies
@@ -93,6 +102,33 @@ class CompileOptions:
             raise OptionsError("mode='pjit' requires a mesh")
         if self.mode == "pjit" and not self.static_jit:
             raise OptionsError("mode='pjit' requires static_jit=True")
+        if self.partition is not None:
+            from .sharding import PARTITION_PROFILES
+            if self.partition not in PARTITION_PROFILES:
+                raise OptionsError(
+                    f"partition must be one of {PARTITION_PROFILES} or "
+                    f"None, got {self.partition!r}")
+            if self.mode == "jit":
+                raise OptionsError(
+                    "partition requires mode='shardmap' (explicit "
+                    "collectives) or mode='pjit' (GSPMD)")
+            if self.mesh is None and self.mesh_shape is None:
+                raise OptionsError(
+                    "partition requires a mesh or mesh_shape")
+        if self.mesh_shape is not None:
+            try:
+                shape = tuple(int(s) for s in self.mesh_shape)
+            except (TypeError, ValueError):
+                raise OptionsError(
+                    f"mesh_shape must be a tuple of ints, got "
+                    f"{self.mesh_shape!r}") from None
+            if not shape or any(s < 1 for s in shape):
+                raise OptionsError(
+                    f"mesh_shape dims must be >= 1, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", shape)
+            if self.partition is None:
+                raise OptionsError("mesh_shape requires a partition profile "
+                                   "(it names the mesh axes)")
         try:
             donate = tuple(int(i) for i in self.donate_argnums)
         except TypeError:
@@ -133,9 +169,13 @@ class CompileOptions:
     def stable_token(self) -> Optional[Tuple]:
         """Like :meth:`cache_key` but process-stable, for the *disk* cache.
 
-        Opaque objects (meshes, shardings, memory plans) key by ``id()``
+        Opaque objects (shardings, memory plans) key by ``id()``
         in-process, which is meaningless across processes — options
-        carrying any return ``None``, meaning "not disk-cacheable"."""
+        carrying any return ``None``, meaning "not disk-cacheable".
+        Meshes are the exception: a mesh is identified by its axis
+        names, shape, and device kind, all process-stable, so
+        shardmap/tp compiles hit the disk cache and warm replicas skip
+        the pipeline."""
         out = []
         for f in dataclasses.fields(self):
             if f.name in self._NON_IDENTITY:
@@ -177,4 +217,23 @@ def _stable_token(v: Any):
         if any(t is _UNSTABLE for t in toks):
             return _UNSTABLE
         return (type(v).__name__,) + toks
+    tok = _mesh_token(v)
+    if tok is not None:
+        return tok
     return _UNSTABLE
+
+
+def _mesh_token(v: Any):
+    """A process-stable token for a jax Mesh (duck-typed so options never
+    import jax): (axis names, mesh shape, device kinds)."""
+    axis_names = getattr(v, "axis_names", None)
+    devices = getattr(v, "devices", None)
+    if axis_names is None or devices is None or not hasattr(devices, "shape"):
+        return None
+    try:
+        kinds = tuple(sorted({f"{d.platform}:{d.device_kind}"
+                              for d in devices.flat}))
+        return ("mesh", tuple(str(a) for a in axis_names),
+                tuple(int(s) for s in devices.shape), kinds)
+    except Exception:
+        return None

@@ -7,7 +7,7 @@
   O2: beyond-paper — O1 + pattern-matched compounding (fusion) + optional
       gradient compression
 """
-from .base import Pass, PassManager, PipelineReport  # noqa: F401
+from .base import Pass, PassManager, PassStats, PipelineReport  # noqa: F401
 from .constant_folding import ConstantFolding  # noqa: F401
 from .cse import CSE  # noqa: F401
 from .dce import DCE  # noqa: F401
@@ -18,15 +18,21 @@ from .layout import LayoutAssignment  # noqa: F401
 from .liveness import liveness_intervals  # noqa: F401
 from .memory import MemoryPlan, plan_memory  # noqa: F401
 from .grad_compress import CompressAllReduce  # noqa: F401
+from .partition import PartitionError, PartitionGraph, simulate_shards  # noqa: F401
 
 
 def standard_pipeline(level: str = "O1", compress_grads: bool = False,
-                      fuse: dict = None) -> PassManager:
+                      fuse: dict = None,
+                      partition: PartitionGraph = None) -> PassManager:
     """``fuse`` gates the matmul-level compounds individually (keys
     ``swiglu``/``norm_matmul``/``rotary_qkv``, missing = on) — the
-    autotuner flips them per graph via ``CompileOptions.fuse_*``."""
+    autotuner flips them per graph via ``CompileOptions.fuse_*``.
+
+    ``partition`` (a configured :class:`PartitionGraph`) runs last: it
+    cuts the *optimized* graph into a per-device program with explicit
+    collective nodes (``CompileOptions.partition``/``mesh_shape``)."""
     if level == "O0":
-        return PassManager([])
+        return PassManager([partition] if partition else [])
     passes = [ConstantFolding(), CSE(), AlgebraicSimplify(), LayoutAssignment(),
               CSE(), DCE()]
     if level == "O2":
@@ -36,6 +42,8 @@ def standard_pipeline(level: str = "O1", compress_grads: bool = False,
                   AlgebraicSimplify(), LayoutAssignment(), CSE(), DCE()]
         if compress_grads:
             passes.append(CompressAllReduce())
+    if partition is not None:
+        passes.append(partition)
     return PassManager(passes)
 
 

@@ -15,6 +15,30 @@ class Pass:
         raise NotImplementedError
 
 
+class PassStats(list):
+    """``report.stats`` — a list of (pass name, stat dict) that also
+    supports lookup by pass name: ``report.stats["partition"]``."""
+
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            for name, st in self:
+                if name == key:
+                    return st
+            raise KeyError(key)
+        return super().__getitem__(key)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except (KeyError, IndexError):
+            return default
+
+    def __contains__(self, key):
+        if isinstance(key, str):
+            return any(name == key for name, _ in self)
+        return super().__contains__(key)
+
+
 @dataclasses.dataclass
 class PipelineReport:
     stats: List[Tuple[str, Dict[str, int]]]
@@ -38,7 +62,7 @@ class PassManager:
     def run(self, fn: Function) -> Tuple[Function, PipelineReport]:
         t0 = time.perf_counter()
         before = len(fn.nodes())
-        stats = []
+        stats = PassStats()
         for p in self.passes:
             fn, st = p.run(fn)
             stats.append((p.name, st))

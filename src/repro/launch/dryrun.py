@@ -42,9 +42,9 @@ def _cell(arch: str, shape_name: str, multi_pod: bool, attn_impl: str = "auto",
     from ..configs.base import SHAPES, supported_shapes
     from ..models.lm import build_graphs
     from ..models.train_graph import make_train_step
-    from .mesh import make_production_mesh
+    from ..backend.sharding import (graph_shardings, make_production_mesh,
+                                    train_step_shardings)
     from .roofline import Roofline, model_flops_for, parse_collectives
-    from .shardings import graph_shardings, train_step_shardings
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     tag = f"{arch.replace('/', '_')}__{shape_name}"

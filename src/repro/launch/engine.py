@@ -72,6 +72,110 @@ _PAGED_STEP_INPUTS = _STEP_INPUTS + ("page_tbl", "temperature", "top_k",
                                      "key")
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated, immutable construction config for :class:`ServeEngine`.
+
+    One declarative object replaces the engine's historical pile of
+    keyword arguments: ``ServeEngine(cfg, EngineConfig(mode="paged",
+    tp=2))``.  The legacy kwargs still work — the compat shim in
+    ``ServeEngine.__init__`` routes them through this class, so every
+    construction path gets the same validation.  Checks that need only
+    the config run here in ``__post_init__``; model-dependent checks
+    (family support, head/ffn divisibility for ``tp``) stay in the
+    engine, which holds the ModelConfig.
+    """
+
+    mode: str = "continuous"
+    slots: int = 4
+    max_len: int = 64
+    seed: int = 0
+    backend: str = "jax"
+    # paged-mode knobs (None = paged default; setting any of them in a
+    # non-paged mode is an error, never a silent ignore)
+    page_size: Optional[int] = None
+    chunk_steps: Optional[int] = None
+    pages: Optional[int] = None
+    prefix_sharing: Optional[bool] = None
+    prefill_chunk: Optional[int] = None
+    # placement: pin every graph to one device, or shard the paged KV
+    # pool over `tp` devices (tensor parallel via the partition pass +
+    # shard_map; mutually exclusive with a device pin)
+    device: Optional[object] = None
+    tp: int = 1
+    # compile-cache / autotune conveniences folded into every graph's
+    # CompileOptions (same effect as passing options=CompileOptions(...))
+    cache_dir: Optional[str] = None
+    cache_budget_bytes: Optional[int] = None
+    autotune: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"mode must be one of {MODES}, got {self.mode!r}")
+        if int(self.slots) < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if int(self.max_len) < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.mode == "paged":
+            if self.page_size is not None and int(self.page_size) < 1:
+                raise ValueError(
+                    f"page_size must be >= 1, got {self.page_size}")
+            if self.chunk_steps is not None and int(self.chunk_steps) < 1:
+                raise ValueError(
+                    f"chunk_steps must be >= 1, got {self.chunk_steps}")
+            if self.prefill_chunk is not None and int(self.prefill_chunk) < 0:
+                raise ValueError(
+                    f"prefill_chunk must be >= 0 (0 = dense prefill), "
+                    f"got {self.prefill_chunk}")
+        else:
+            ignored = {k: v for k, v in [
+                ("page_size", self.page_size),
+                ("chunk_steps", self.chunk_steps),
+                ("pages", self.pages),
+                ("prefix_sharing", self.prefix_sharing),
+                ("prefill_chunk", self.prefill_chunk)] if v is not None}
+            if ignored:
+                raise ValueError(
+                    f"{sorted(ignored)} need mode='paged'; mode "
+                    f"{self.mode!r} uses fixed per-slot cache rows")
+        if int(self.tp) < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if int(self.tp) > 1:
+            if self.mode != "paged":
+                raise ValueError(
+                    f"tp={self.tp} shards the paged KV pool; it needs "
+                    f"mode='paged', got {self.mode!r}")
+            if self.backend != "jax":
+                raise ValueError(
+                    f"tp={self.tp} lowers via shard_map and needs the "
+                    f"jax backend, got {self.backend!r}")
+            if self.device is not None:
+                raise ValueError(
+                    "tp shards over a device mesh and is incompatible "
+                    "with a single-device pin (device=...)")
+        if self.cache_budget_bytes is not None \
+                and int(self.cache_budget_bytes) < 1:
+            raise ValueError(
+                f"cache_budget_bytes must be >= 1, "
+                f"got {self.cache_budget_bytes}")
+
+    def compile_options(self, base: Optional[CompileOptions] = None
+                        ) -> CompileOptions:
+        """The engine-level CompileOptions these knobs imply, layered on
+        ``base`` (an explicit ``options=`` object; the config's cache /
+        autotune fields override only when actually set)."""
+        opts = base if base is not None else CompileOptions()
+        kw = {}
+        if self.cache_dir is not None:
+            kw["cache_dir"] = self.cache_dir
+        if self.cache_budget_bytes is not None:
+            kw["cache_budget_bytes"] = int(self.cache_budget_bytes)
+        if self.autotune:
+            kw["autotune"] = True
+        return opts.replace(**kw) if kw else opts
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request tracked by the engine."""
@@ -824,6 +928,11 @@ class EngineReport:
     errors: Dict[int, str] = dataclasses.field(default_factory=dict)
     counters: Dict[str, int] = dataclasses.field(default_factory=dict)
     health: str = "ok"
+    # tensor parallelism (PR 10): mesh width and the KV bytes each
+    # device actually holds — pool.total_bytes counts the *global* pool,
+    # of which every device stores only its n_kv_heads/tp shard
+    tp: int = 1
+    kv_bytes_per_device: Optional[int] = None
 
 
 class ServeEngine:
@@ -834,55 +943,90 @@ class ServeEngine:
     pairs as they are produced (continuous mode).
     """
 
-    def __init__(self, cfg: ModelConfig, *, slots: int = 4, max_len: int = 64,
-                 mode: str = "continuous", seed: int = 0,
-                 backend: str = "jax",
+    def __init__(self, cfg: ModelConfig,
+                 config: Optional[EngineConfig] = None, *,
                  options: Optional[CompileOptions] = None,
-                 page_size: Optional[int] = None,
-                 chunk_steps: Optional[int] = None,
-                 pages: Optional[int] = None,
-                 device: Optional[object] = None,
-                 faults: Optional[FaultInjector] = None,
-                 prefix_sharing: Optional[bool] = None,
-                 prefill_chunk: Optional[int] = None):
-        """Every graph the engine compiles (serve/decode step, per-length
-        prefills, fused donated chunks) goes through ``options`` — so
-        ``CompileOptions(cache_dir=..., autotune=True)`` gives a serving
-        process a persistent warm-start compile cache and recorded
-        attention tuning; a restarted engine skips the pass pipeline for
-        every graph whose structural signature is unchanged (see
-        :meth:`cache_stats` disk counters)."""
-        if mode not in MODES:
-            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+                 faults: Optional[FaultInjector] = None, **legacy_kw):
+        """``ServeEngine(cfg, EngineConfig(...))`` is the sanctioned
+        construction path; the legacy keyword spelling
+        (``ServeEngine(cfg, mode=..., slots=...)``) still works and is
+        routed through :class:`EngineConfig`, so both get identical
+        validation.  Every graph the engine compiles (serve/decode step,
+        per-length prefills, fused donated chunks) goes through
+        ``options`` — so ``CompileOptions(cache_dir=..., autotune=True)``
+        (or the equivalent EngineConfig fields) gives a serving process a
+        persistent warm-start compile cache and recorded attention
+        tuning; a restarted engine skips the pass pipeline for every
+        graph whose structural signature is unchanged (see
+        :meth:`cache_stats` disk counters).  ``config.tp > 1`` shards
+        the paged chunk + prefill graphs over a ``tp``-device mesh via
+        ``CompileOptions(mode="shardmap", partition="tp")``: each device
+        holds ``n_kv_heads/tp`` heads of every KV page, page tables stay
+        replicated host-side, and greedy decode is token-identical to
+        ``tp=1``."""
+        if config is None:
+            config = EngineConfig(**legacy_kw)
+        elif legacy_kw:
+            raise TypeError(
+                f"pass either an EngineConfig or legacy keywords, not "
+                f"both (got a config plus {sorted(legacy_kw)})")
+        if not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"config must be an EngineConfig, got "
+                f"{type(config).__name__}")
+        mode = config.mode
         if mode != "lockstep" and cfg.family != "dense":
             raise NotImplementedError(
                 f"mode {mode!r} needs the dense-family serve/chunk graphs; "
                 f"{cfg.name} ({cfg.family}) serves via mode='lockstep'")
         self.cfg = cfg
-        self.slots = int(slots)
-        self.max_len = int(max_len)
+        self.config = config
+        self.slots = int(config.slots)
+        self.max_len = int(config.max_len)
         self.mode = mode
-        self.seed = seed
+        self.seed = config.seed
+        self.tp = int(config.tp)
         # `device` pins every compiled graph (and so the KV pool buffers
         # the outputs allocate) to one accelerator — how a multi-engine
         # host runs one engine per device (ROADMAP §5)
         self.backend = Backend.create(
-            backend, **({"device": device} if device is not None else {}))
-        self.base_options = options or CompileOptions()
+            config.backend, **({"device": config.device}
+                               if config.device is not None else {}))
+        self.base_options = config.compile_options(options)
+        if self.tp > 1:
+            for dim, val in (("n_heads", cfg.n_heads),
+                             ("n_kv_heads", cfg.n_kv_heads),
+                             ("d_ff", cfg.d_ff)):
+                if val % self.tp:
+                    raise ValueError(
+                        f"tp={self.tp} must divide {dim}={val} "
+                        f"({cfg.name})")
+            import jax
+            n_dev = len(jax.devices())
+            if n_dev < self.tp:
+                raise RuntimeError(
+                    f"tp={self.tp} needs >= {self.tp} devices but jax "
+                    f"sees {n_dev}; on CPU set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={self.tp}")
+            # the chunk + paged-prefill graphs compile partitioned: the
+            # PartitionGraph pass cuts them per-device and the backend
+            # shard_maps the result over a (tp,)-"model" mesh.  The
+            # dense prefill fallback (prefill_chunk=0) stays on
+            # base_options — it computes global caches that the host
+            # scatters into the (globally addressed) pool pages.
+            self._graph_options = self.base_options.replace(
+                mode="shardmap", partition="tp", mesh_shape=(self.tp,))
+        else:
+            self._graph_options = self.base_options
 
         if mode == "paged":
             # paged mode always dispatches the fused chunk graph — one
             # dispatch decodes chunk_steps tokens per row; chunk_steps=1
             # degenerates to per-step scheduling like `continuous`
-            page_size = 8 if page_size is None else page_size
-            chunk_steps = 4 if chunk_steps is None else chunk_steps
-            if page_size < 1:
-                raise ValueError(f"page_size must be >= 1, got {page_size}")
-            if chunk_steps < 1:
-                raise ValueError(
-                    f"chunk_steps must be >= 1, got {chunk_steps}")
-            self.page_size = int(page_size)
-            self.chunk_steps = int(chunk_steps)
+            self.page_size = int(config.page_size
+                                 if config.page_size is not None else 8)
+            self.chunk_steps = int(config.chunk_steps
+                                   if config.chunk_steps is not None else 4)
             # PR 9 knobs: content-hash prefix sharing across requests
             # (on by default — greedy parity is preserved by exact-value
             # COW semantics) and in-graph chunked prefill (0 restores
@@ -892,20 +1036,16 @@ class ServeEngine:
             # prefill in one step (no schedule stretch, the request
             # joins decode the step it was admitted) while long prompts
             # interleave with decode rows instead of stalling them.
-            self.prefix_sharing = (True if prefix_sharing is None
-                                   else bool(prefix_sharing))
+            self.prefix_sharing = (True if config.prefix_sharing is None
+                                   else bool(config.prefix_sharing))
             self.prefill_chunk = (4 * self.page_size
-                                  if prefill_chunk is None
-                                  else int(prefill_chunk))
-            if self.prefill_chunk < 0:
-                raise ValueError(
-                    f"prefill_chunk must be >= 0 (0 = dense prefill), "
-                    f"got {prefill_chunk}")
+                                  if config.prefill_chunk is None
+                                  else int(config.prefill_chunk))
             mp = -(-self.max_len // self.page_size)
             # default pool: the worst case (every slot at max_len) plus
             # the trash page — `pages` shrinks it to create admission
             # pressure on mixed-length workloads
-            self.n_pages = int(pages) if pages is not None \
+            self.n_pages = int(config.pages) if config.pages is not None \
                 else 1 + self.slots * mp
             if self.n_pages < 2:
                 raise ValueError(
@@ -916,19 +1056,8 @@ class ServeEngine:
                 cfg, self.max_len, self.slots, self.chunk_steps,
                 page_size=self.page_size, n_pages=self.n_pages)
         else:
-            # never silently ignore paged-only knobs in other modes
-            ignored = {k: v for k, v in [("page_size", page_size),
-                                         ("chunk_steps", chunk_steps),
-                                         ("pages", pages),
-                                         ("prefix_sharing", prefix_sharing),
-                                         ("prefill_chunk", prefill_chunk)]
-                       if v is not None}
             self.prefix_sharing = False
             self.prefill_chunk = 0
-            if ignored:
-                raise ValueError(
-                    f"{sorted(ignored)} need mode='paged'; mode {mode!r} "
-                    f"uses fixed per-slot cache rows")
             kind = "serve" if mode == "continuous" else "decode"
             self.graphs = build_graphs(
                 cfg, ShapeConfig(kind, kind, self.max_len, self.slots),
@@ -952,13 +1081,13 @@ class ServeEngine:
         # step constant would free a buffer the next step still reads
         donate = tuple(ix for ix, j in zip(cache_ix, self._recycle)
                        if j is not None) if mode != "lockstep" else ()
-        self.options = self.base_options.replace(donate_argnums=donate)
+        self.options = self._graph_options.replace(donate_argnums=donate)
         # donated mode compiles fused multi-step chunk graphs lazily (the
         # step count is a workload property); the decode graph above still
         # provides the cache input layout and the parameter registry
         self.cf = (self.backend.compile(self.graphs.fn, self.options)
                    if mode != "donated" else None)
-        self.params = b.init_params(seed)
+        self.params = b.init_params(self.seed)
         self.param_order = [self.params[n] for n in b.param_names()]
         if mode != "lockstep":
             import jax.numpy as jnp
@@ -1118,6 +1247,7 @@ class ServeEngine:
         if self.mode == "paged":
             d["pages_in_use"] = self.pool.pages_in_use
             d["pages"] = self.pool.n_pages - 1
+            d["tp"] = self.tp
             d["cow_copies"] = self.pool.cow_copies
             d["shared_attaches"] = self.pool.shared_attaches
         return d
@@ -1385,7 +1515,7 @@ class ServeEngine:
             cache_ix = tuple(i for i, n in enumerate(g.builder.inputs)
                              if n.name not in step_in)
             cf = self.backend.compile(
-                g.fn, self.base_options.replace(donate_argnums=cache_ix))
+                g.fn, self._graph_options.replace(donate_argnums=cache_ix))
             import jax.numpy as jnp
             names = g.builder.param_names()
             missing = [n for n in names if n not in self._jparam_map]
@@ -1871,4 +2001,7 @@ class ServeEngine:
             statuses={rid: r.status for rid, r in self._requests.items()},
             errors={rid: r.error for rid, r in self._requests.items()
                     if r.error is not None},
-            counters=dict(self.counters), health=self.health)
+            counters=dict(self.counters), health=self.health,
+            tp=self.tp,
+            kv_bytes_per_device=(self.pool.total_bytes // self.tp
+                                 if self.pool is not None else None))

@@ -1,48 +1,22 @@
-"""Production mesh construction.
+"""DEPRECATED shim — mesh construction moved to ``repro.backend.sharding``.
 
-Single pod: (16, 16) = 256 chips, axes (data, model).
-Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
-axis crosses the inter-pod links (DCN or optical), so policies place only
-gradient/ZeRO traffic there.
-
-Defined as functions so importing this module never touches jax device
-state (the dry-run must set XLA_FLAGS before first jax init).
+This module stays for one release so external snippets keep importing;
+in-repo code must use :mod:`repro.backend.sharding` directly
+(``scripts/check_deprecated.py`` enforces it).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import warnings
 
-import numpy as np
+from ..backend.sharding import (  # noqa: F401
+    data_axes,
+    make_host_mesh,
+    make_mesh,
+    make_production_mesh,
+    mesh_axis_sizes,
+)
 
-
-def make_production_mesh(*, multi_pod: bool = False):
-    import jax
-
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    """Arbitrary mesh (tests use small fake-device meshes)."""
-    import jax
-
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh(model_parallel: Optional[int] = None):
-    """Mesh over whatever devices exist (smoke tests: 1 CPU)."""
-    import jax
-
-    n = len(jax.devices())
-    mp = model_parallel or 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"))
-
-
-def mesh_axis_sizes(mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
-
-
-def data_axes(mesh) -> Tuple[str, ...]:
-    """Axes that shard the batch (pod+data when present)."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+warnings.warn(
+    "repro.launch.mesh is deprecated; import from "
+    "repro.backend.sharding instead",
+    DeprecationWarning, stacklevel=2)

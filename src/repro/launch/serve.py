@@ -69,6 +69,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--pages", type=int, default=None,
                     help="paged mode: physical page-pool size (default: "
                          "worst case, slots * ceil(max_len/page_size) + 1)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="paged mode: tensor-parallel width — shard the "
+                         "chunk/prefill graphs and the KV pool's kv_heads "
+                         "dim over a tp-device mesh (greedy outputs stay "
+                         "token-identical to tp=1; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="paged mode: disable copy-on-write prefix page "
                          "sharing (the unshared baseline leg)")
@@ -132,9 +139,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         from .faults import configure
         configure(args.faults, args.faults_seed)
 
-    from ..backend import CompileOptions
     from ..configs import get_config
-    from .engine import ServeEngine
+    from .engine import EngineConfig, ServeEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -180,16 +186,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         raise SystemExit(
             f"--shared-prefix-len {args.shared_prefix_len} must be in "
             f"[0, --prompt-len {P}]")
-    options = CompileOptions(cache_dir=args.cache_dir,
-                             autotune=args.autotune)
-    engine = ServeEngine(cfg, slots=args.batch, max_len=max_len,
-                         mode=mode, seed=args.seed, options=options,
-                         page_size=args.page_size,
-                         chunk_steps=args.chunk_steps, pages=args.pages,
-                         device=args.device,
-                         prefix_sharing=(False if args.no_prefix_sharing
-                                         else None),
-                         prefill_chunk=args.prefill_chunk)
+    try:
+        econf = EngineConfig(
+            mode=mode, slots=args.batch, max_len=max_len, seed=args.seed,
+            page_size=args.page_size, chunk_steps=args.chunk_steps,
+            pages=args.pages, device=args.device, tp=args.tp,
+            prefix_sharing=(False if args.no_prefix_sharing else None),
+            prefill_chunk=args.prefill_chunk,
+            cache_dir=args.cache_dir, autotune=args.autotune)
+        engine = ServeEngine(cfg, econf)
+    except ValueError as e:
+        raise SystemExit(str(e))
     if args.serve_http:
         return _serve_http(engine, args, cfg, mode, max_len)
     sampling = {}
@@ -232,6 +239,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"page_allocs={p.page_allocs} page_frees={p.page_frees} "
                   f"cow={p.cow_copies} attach={p.shared_attaches} "
                   f"arena={p.decode_arena_bytes}B")
+            if rep.tp > 1:
+                print(f"[kv-pool:tp] tp={rep.tp} "
+                      f"bytes/device={rep.kv_bytes_per_device} "
+                      f"(global {p.total_bytes}B)")
             if rep.kv_bytes_per_active_token is not None:
                 # None: no decode dispatch ran (e.g. --gen 1 finishes
                 # every request straight out of prefill)
@@ -291,7 +302,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                            "top_k": args.top_k,
                            "shared_prefix_len": S,
                            "prefix_sharing": engine.prefix_sharing,
-                           "prefill_chunk": engine.prefill_chunk}
+                           "prefill_chunk": engine.prefill_chunk,
+                           "tp": engine.tp}
         if mode == "paged":
             doc["pool_verify"] = engine.pool.verify()
         with open(args.report_json, "w") as fh:

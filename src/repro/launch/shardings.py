@@ -1,60 +1,24 @@
-"""Glue between graphs and the mesh: per-input NamedShardings + logical
-axis rules, derived from each arch's sharding policy (runtime/distributed).
+"""DEPRECATED shim — per-graph sharding glue moved to
+``repro.backend.sharding``.
 
-This is the distribution half of nGraph's layout abstraction: graphs
-carry *logical* axis names; the policy maps them to mesh axes here, at
-transformer-compile time.
+This module stays for one release so external snippets keep importing;
+in-repo code must use :mod:`repro.backend.sharding` directly
+(``scripts/check_deprecated.py`` enforces it).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import warnings
 
-from ..models.builder import ModelBuilder
-from ..models.lm import ModelGraphs
-from ..models.train_graph import TrainStep
-from ..runtime.distributed import ShardingPolicy, policy_for_arch
+from ..backend.sharding import (  # noqa: F401
+    ShardingPolicy,
+    data_shardings,
+    graph_shardings,
+    param_shardings,
+    policy_for_arch,
+    train_step_shardings,
+)
 
-
-def param_shardings(builder: ModelBuilder, mesh, policy: ShardingPolicy):
-    from ..runtime.distributed import ParamInfo
-
-    out = []
-    for name in builder.param_names():
-        s = builder.params[name]
-        info = ParamInfo(s.name, s.shape, s.dtype, s.logical_axes)
-        out.append(policy.sharding_for(info, mesh))
-    return out
-
-
-def data_shardings(builder: ModelBuilder, mesh, policy: ShardingPolicy):
-    out = []
-    for node in builder.inputs:
-        spec = builder.input_specs[node.name]
-        out.append(policy.input_sharding(mesh, node.out_types[0].shape, spec))
-    return out
-
-
-def graph_shardings(graphs: ModelGraphs, mesh,
-                    policy: Optional[ShardingPolicy] = None):
-    """(in_shardings, axis_rules) for a prefill/decode graph."""
-    policy = policy or policy_for_arch(graphs.cfg.name)
-    ins = data_shardings(graphs.builder, mesh, policy) + \
-        param_shardings(graphs.builder, mesh, policy)
-    return tuple(ins), policy.as_rules()
-
-
-def train_step_shardings(ts: TrainStep, mesh,
-                         policy: Optional[ShardingPolicy] = None):
-    """(in_shardings, out_shardings, donate_argnums, axis_rules) for a
-    train-step Function: (data..., step, *params, *m, *v) ->
-    (loss, *params', *m', *v')."""
-    policy = policy or policy_for_arch(ts.graphs.cfg.name)
-    b = ts.graphs.builder
-    data = data_shardings(b, mesh, policy)
-    repl = policy.replicated(mesh)
-    pshard = param_shardings(b, mesh, policy)
-    ins = tuple(data) + (repl,) + tuple(pshard) * 3
-    outs = (repl,) + tuple(pshard) * 3
-    n_data = len(data)
-    donate = tuple(range(n_data + 1, n_data + 1 + 3 * len(pshard)))
-    return ins, outs, donate, policy.as_rules()
+warnings.warn(
+    "repro.launch.shardings is deprecated; import from "
+    "repro.backend.sharding instead",
+    DeprecationWarning, stacklevel=2)

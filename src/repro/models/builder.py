@@ -82,6 +82,9 @@ class ModelBuilder:
         if spec is None:
             spec = ("batch",) + (None,) * (len(tuple(shape)) - 1) if shape else ()
         self.input_specs[name] = tuple(spec)
+        # stamped on the node so the backend can derive shardings from the
+        # Function alone (PartitionGraph pass, pjit auto-shardings)
+        p.attrs["logical_axes"] = tuple(spec)
         return p.out()
 
     # -- parameters -------------------------------------------------------------
@@ -102,6 +105,7 @@ class ModelBuilder:
         if len(logical) != len(shape):
             raise ValueError(f"{name}: logical axes {logical} vs shape {shape}")
         node = ops.parameter(shape, dtype, name)
+        node.attrs["logical_axes"] = logical
         self.params[name] = ParamSpec(name, shape, dtype, logical,
                                       init or normal_init(), node)
         return self.cast(node.out())

@@ -1,160 +1,24 @@
-"""Sharding policy: map IR parameter/batch tensors onto the mesh.
+"""DEPRECATED shim — the sharding policy moved to ``repro.backend.sharding``.
 
-Policies implement the parallelism mix (DP across pod+data, FSDP/ZeRO on
-a configurable axis set, TP on 'model', EP for MoE experts) as
-PartitionSpecs consumed by pjit.  The policy is *named-axis driven*: model
-builders tag every parameter with logical axes ("vocab", "embed", "ffn",
-"heads", "experts", ...) and the policy maps logical axes -> mesh axes —
-layout abstraction at the distribution level, mirroring what the IR does
-per-device (paper sec. 2).
+This module stays for one release so external snippets keep importing;
+in-repo code must use :mod:`repro.backend.sharding` directly
+(``scripts/check_deprecated.py`` enforces it).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
 
-import numpy as np
+from ..backend.sharding import (  # noqa: F401
+    ARCH_PROFILES,
+    DEFAULT_RULES,
+    ParamInfo,
+    ShardingPolicy,
+    infos_to_shardings,
+    policy_for,
+    policy_for_arch,
+)
 
-
-@dataclasses.dataclass
-class ParamInfo:
-    """Logical description of one parameter tensor."""
-
-    name: str
-    shape: Tuple[int, ...]
-    dtype: Any
-    logical_axes: Tuple[Optional[str], ...]  # one entry per dim
-
-
-# logical axis -> mesh axes, per policy profile
-DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
-    "batch": ("pod", "data"),  # batch dims (pod filtered out on 1-pod mesh)
-    "vocab": ("model",),
-    "embed": ("zero",),        # ZeRO/FSDP shard of the embedding dim
-    "ffn": ("model",),         # TP shard of the hidden dim
-    "heads": ("model",),
-    "kv_heads": (),            # few kv heads: keep replicated
-    "kv_seq": ("model",),      # decode KV caches: sequence-shard on model
-    "experts": ("expert",),    # resolved to real axes by the profile
-    "expert_ffn": (),
-    "layers": (),              # stacked-layer leading dim stays unsharded
-    "conv": (),
-    "seq": (),
-    "state": (),
-    None: (),
-}
-
-
-@dataclasses.dataclass
-class ShardingPolicy:
-    """Maps logical axes to mesh axes and produces PartitionSpecs."""
-
-    rules: Dict[str, Tuple[str, ...]]
-    zero_axes: Tuple[str, ...] = ("data",)   # FSDP axes for 'embed'-tagged dims
-    expert_axes: Tuple[str, ...] = ("model",)
-    batch_axes: Tuple[str, ...] = ("data",)  # + 'pod' when present
-
-    def resolve(self, logical: Optional[str]) -> Tuple[str, ...]:
-        axes = self.rules.get(logical, ())
-        out = []
-        for a in axes:
-            if a == "expert":
-                out.extend(self.expert_axes)
-            elif a == "zero":
-                out.extend(self.zero_axes)
-            else:
-                out.append(a)
-        return tuple(out)
-
-    def spec_for(self, info: ParamInfo, mesh) -> "jax.sharding.PartitionSpec":
-        from jax.sharding import PartitionSpec
-
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        used = set()
-        entries: List[Any] = []
-        for dim, logical in zip(info.shape, info.logical_axes):
-            axes = [a for a in self.resolve(logical)
-                    if a in sizes and a not in used]
-            # keep only axes that divide the dim evenly
-            keep: List[str] = []
-            prod = 1
-            for a in axes:
-                if dim % (prod * sizes[a]) == 0:
-                    keep.append(a)
-                    prod *= sizes[a]
-            used.update(keep)
-            if not keep:
-                entries.append(None)
-            elif len(keep) == 1:
-                entries.append(keep[0])
-            else:
-                entries.append(tuple(keep))
-        return PartitionSpec(*entries)
-
-    def sharding_for(self, info: ParamInfo, mesh):
-        from jax.sharding import NamedSharding
-
-        return NamedSharding(mesh, self.spec_for(info, mesh))
-
-    def batch_spec(self, mesh, rank: int = 2):
-        """Batch tensors: leading dim over (pod+)data axes."""
-        from jax.sharding import PartitionSpec
-
-        axes = tuple(a for a in ("pod",) + tuple(self.batch_axes)
-                     if a in mesh.axis_names)
-        axes = tuple(dict.fromkeys(axes))
-        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
-        return PartitionSpec(lead, *([None] * (rank - 1)))
-
-    def replicated(self, mesh):
-        from jax.sharding import NamedSharding, PartitionSpec
-
-        return NamedSharding(mesh, PartitionSpec())
-
-    def as_rules(self) -> Dict[str, Tuple[str, ...]]:
-        """Flat logical->mesh-axes table for the ShardingConstraint
-        emitter (jax_backend): every known logical name, resolved."""
-        return {k: self.resolve(k) for k in self.rules if k is not None}
-
-    def input_sharding(self, mesh, shape, logical_spec):
-        """NamedSharding for a data input from its logical per-dim spec."""
-        info = ParamInfo("_input", tuple(shape), None, tuple(logical_spec))
-        return self.sharding_for(info, mesh)
-
-
-def policy_for(profile: str = "default", mesh=None) -> ShardingPolicy:
-    """Profiles implement per-arch parallelism mixes (DESIGN.md sec. 5)."""
-    rules = dict(DEFAULT_RULES)
-    if profile == "default":
-        return ShardingPolicy(rules)
-    if profile == "zero3_pod":
-        # shard the FSDP ('embed') dims across pods too: ZeRO-3 over all chips
-        return ShardingPolicy(rules, zero_axes=("pod", "data"))
-    if profile == "expert_parallel":
-        # MoE: experts across data*model (EP), used when E divides the product
-        return ShardingPolicy(rules, expert_axes=("data", "model"))
-    if profile == "zero3_pod_ep":
-        # deepseek-v3: ZeRO-3 across pods + 256-way expert parallelism
-        return ShardingPolicy(rules, zero_axes=("pod", "data"),
-                              expert_axes=("data", "model"))
-    if profile == "expert_tp":
-        # MoE with few experts: shard inside each expert instead
-        rules["experts"] = ()
-        rules["expert_ffn"] = ("model",)
-        return ShardingPolicy(rules)
-    raise KeyError(f"unknown sharding profile {profile}")
-
-
-# per-arch parallelism profile (DESIGN.md sec. 5)
-ARCH_PROFILES: Dict[str, str] = {
-    "deepseek-v3-671b": "zero3_pod_ep",
-    "mixtral-8x22b": "expert_tp",
-}
-
-
-def policy_for_arch(arch_name: str) -> ShardingPolicy:
-    return policy_for(ARCH_PROFILES.get(arch_name, "default"))
-
-
-def infos_to_shardings(policy: ShardingPolicy, infos: Sequence[ParamInfo], mesh):
-    return [policy.sharding_for(i, mesh) for i in infos]
+warnings.warn(
+    "repro.runtime.distributed is deprecated; import from "
+    "repro.backend.sharding instead",
+    DeprecationWarning, stacklevel=2)

@@ -120,6 +120,19 @@ def _chaos_report(**over):
     return doc
 
 
+def _tp2_report(results, **over):
+    """The PR 10 tensor-parallel leg: the standard greedy workload under
+    --tp 2, so it joins the cross-mode parity loop; the tp contract adds
+    kv_bytes_per_device == pool.total_bytes / 2 and exact accounting."""
+    doc = _report("paged", results,
+                  pool=_paged_pool(total_bytes=18432), kv=930.0)
+    doc["workload"]["tp"] = 2
+    doc.update({"leg": "paged-tp2", "tp": 2, "kv_bytes_per_device": 9216,
+                "pool_verify": []})
+    doc.update(over)
+    return doc
+
+
 def _shared_reports():
     """The PR 9 shared-prefix pair: one shared-prompt workload run twice
     on the paged engine — --no-prefix-sharing (base) vs COW sharing on.
@@ -158,6 +171,7 @@ def test_serving_matrix_gate(tmp_path):
         "server": _server_report(res),
         "sbase": sbase,
         "sshared": sshared,
+        "tp2": _tp2_report(res),
         "chaos": _chaos_report(),
     }
     paths = {}
@@ -227,6 +241,36 @@ def test_serving_matrix_gate(tmp_path):
     r = _matrix(*paths.values())
     assert r.returncode == 1 and "ttft_p95_ms" in r.stderr
     (tmp_path / "server.json").write_text(json.dumps(good["server"]))
+
+    # the tensor-parallel leg is required: the matrix must prove paged
+    # serving still holds token parity when the KV pool is sharded
+    r = _matrix(*(p for n, p in paths.items() if n != "tp2"))
+    assert r.returncode == 1 and "paged-tp2" in r.stderr
+
+    # a leg that never actually ran tensor-parallel must fail
+    (tmp_path / "tp2.json").write_text(json.dumps(_tp2_report(res, tp=1)))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "--tp 2" in r.stderr
+
+    # each device must hold exactly half the global pool bytes
+    (tmp_path / "tp2.json").write_text(json.dumps(
+        _tp2_report(res, kv_bytes_per_device=18432)))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "kv_bytes_per_device" in r.stderr
+
+    # tp tokens join the cross-mode greedy parity loop
+    (tmp_path / "tp2.json").write_text(json.dumps(
+        _tp2_report(dict(res, **{"0": [1, 2, 4]}))))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "req 0 diverged" in r.stderr
+
+    # a tp pool leak must fail even at full parity
+    (tmp_path / "tp2.json").write_text(json.dumps(_tp2_report(
+        res, pool=_paged_pool(total_bytes=18432, pages_in_use=2,
+                              page_frees=7))))
+    r = _matrix(*paths.values())
+    assert r.returncode == 1 and "leak" in r.stderr
+    (tmp_path / "tp2.json").write_text(json.dumps(good["tp2"]))
 
     # dropping either half of the shared-prefix pair must fail — the
     # COW gate needs both the sharing-on and --no-prefix-sharing legs

@@ -1,0 +1,149 @@
+"""EngineConfig + CompileOptions validation (PR 10 API redesign).
+
+``ServeEngine(cfg, EngineConfig(...))`` is the sanctioned construction
+path; the legacy kwarg spelling routes through the same dataclass, so
+both get identical validation with identical messages.  CompileOptions
+grew ``partition``/``mesh_shape``; the mesh-bearing options must keep a
+stable ``cache_key`` so the disk compile cache works across processes."""
+import dataclasses
+
+import pytest
+
+from repro.backend import CompileOptions, OptionsError
+from repro.configs import get_config
+from repro.launch.engine import MODES, EngineConfig, ServeEngine
+
+CFG = get_config("deepseek-7b").reduced()
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation
+# ---------------------------------------------------------------------------
+def test_engine_config_defaults_and_frozen():
+    c = EngineConfig()
+    assert c.mode == "continuous" and c.slots == 4 and c.tp == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.slots = 8
+
+
+def test_engine_config_mode_message_matches_legacy():
+    with pytest.raises(ValueError) as ei:
+        EngineConfig(mode="bogus")
+    assert str(ei.value) == f"mode must be one of {MODES}, got 'bogus'"
+    # the ServeEngine kwarg shim surfaces the identical message
+    with pytest.raises(ValueError, match="mode must be one of"):
+        ServeEngine(CFG, mode="bogus")
+
+
+@pytest.mark.parametrize("kw", [dict(slots=0), dict(max_len=0),
+                                dict(mode="paged", page_size=0),
+                                dict(mode="paged", chunk_steps=0),
+                                dict(mode="paged", prefill_chunk=-1),
+                                dict(cache_budget_bytes=0),
+                                dict(tp=0)])
+def test_engine_config_range_checks(kw):
+    with pytest.raises(ValueError):
+        EngineConfig(**kw)
+
+
+def test_paged_knobs_rejected_outside_paged_mode():
+    """Setting a paged knob in a non-paged mode is an error, never a
+    silent ignore — exact legacy message preserved."""
+    with pytest.raises(ValueError) as ei:
+        EngineConfig(mode="continuous", page_size=4, prefix_sharing=True)
+    assert str(ei.value) == ("['page_size', 'prefix_sharing'] need "
+                             "mode='paged'; mode 'continuous' uses fixed "
+                             "per-slot cache rows")
+
+
+def test_tp_constraints():
+    # tp shards the paged pool: other modes refuse
+    with pytest.raises(ValueError, match="mode='paged'"):
+        EngineConfig(mode="continuous", tp=2)
+    # shard_map lowering is jax-only
+    with pytest.raises(ValueError, match="jax backend"):
+        EngineConfig(mode="paged", tp=2, backend="interpreter")
+    # a mesh and a single-device pin are mutually exclusive
+    with pytest.raises(ValueError, match="device"):
+        EngineConfig(mode="paged", tp=2, device="cpu:0")
+    assert EngineConfig(mode="paged", tp=2).tp == 2
+
+
+def test_engine_rejects_config_plus_legacy_kwargs():
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(CFG, EngineConfig(), slots=3)
+    with pytest.raises(TypeError, match="must be an EngineConfig"):
+        ServeEngine(CFG, {"mode": "paged"})
+
+
+def test_engine_tp_divisibility_check():
+    """Model-dependent checks stay in the engine: tp must divide the
+    head/ffn dims of the actual config (reduced deepseek-7b: 4/4/128)."""
+    with pytest.raises(ValueError, match=r"tp=3 must divide n_heads=4"):
+        ServeEngine(CFG, EngineConfig(mode="paged", tp=3))
+
+
+def test_engine_tp_needs_devices():
+    """tp=2 on a single-device process fails fast with the XLA_FLAGS
+    recipe instead of compiling a mesh it cannot place (the real tp runs
+    live in subprocesses — tests/test_tp_serving.py)."""
+    import jax
+
+    if len(jax.devices()) >= 2:  # pragma: no cover - single-device CI
+        pytest.skip("multi-device process")
+    with pytest.raises(RuntimeError, match="device_count"):
+        ServeEngine(CFG, EngineConfig(mode="paged", tp=2))
+
+
+def test_compile_options_folding():
+    """cache/autotune conveniences layer onto an explicit options
+    object without clobbering its other fields."""
+    c = EngineConfig(cache_dir="/tmp/x", cache_budget_bytes=123,
+                     autotune=True)
+    o = c.compile_options()
+    assert (o.cache_dir, o.cache_budget_bytes, o.autotune) == \
+        ("/tmp/x", 123, True)
+    base = CompileOptions(level="O2", static_jit=False)
+    o2 = c.compile_options(base)
+    assert o2.level == "O2" and not o2.static_jit and o2.cache_dir == "/tmp/x"
+    # nothing set -> base passes through untouched
+    assert EngineConfig().compile_options(base) is base
+
+
+# ---------------------------------------------------------------------------
+# CompileOptions partition/mesh_shape validation + stable cache identity
+# ---------------------------------------------------------------------------
+def test_options_partition_validation():
+    with pytest.raises(OptionsError, match="partition must be one of"):
+        CompileOptions(mode="shardmap", partition="nope", mesh_shape=(2,))
+    with pytest.raises(OptionsError, match="mode='shardmap'"):
+        CompileOptions(partition="tp", mesh_shape=(2,))
+    with pytest.raises(OptionsError, match="mesh or mesh_shape"):
+        CompileOptions(mode="shardmap", partition="tp")
+    with pytest.raises(OptionsError, match="partition profile"):
+        CompileOptions(mode="shardmap", mesh_shape=(2,))
+    with pytest.raises(OptionsError, match="tuple of ints"):
+        CompileOptions(mode="shardmap", partition="tp", mesh_shape=("x",))
+    with pytest.raises(OptionsError, match=">= 1"):
+        CompileOptions(mode="shardmap", partition="tp", mesh_shape=(0,))
+
+
+def test_options_mesh_shape_normalized():
+    o = CompileOptions(mode="shardmap", partition="tp", mesh_shape=[2])
+    assert o.mesh_shape == (2,) and isinstance(o.mesh_shape[0], int)
+
+
+def test_mesh_options_cache_key_stable():
+    """Two identical mesh-bearing options must produce the same cache
+    key (process-stable disk-cache identity), and the partition knobs
+    must be part of it — a tp=2 compile can never alias a tp=1 entry."""
+    mk = lambda **kw: CompileOptions(mode="shardmap", partition="tp",
+                                     mesh_shape=(2,), **kw)
+    assert mk().cache_key() == mk().cache_key()
+    assert hash(mk().cache_key()) == hash(mk().cache_key())
+    base = CompileOptions(mode="shardmap", partition="tp", mesh_shape=(2,))
+    other = CompileOptions(mode="shardmap", partition="tp", mesh_shape=(4,))
+    plain = CompileOptions()
+    assert base.cache_key() != other.cache_key()
+    assert base.cache_key() != plain.cache_key()
+    assert base.replace(mesh_shape=(2,)).cache_key() == base.cache_key()

@@ -9,7 +9,7 @@ import pytest
 
 from repro.runtime.checkpoint import AsyncCheckpointer, CheckpointManager
 from repro.runtime.data import DataConfig, Prefetcher, SyntheticLM
-from repro.runtime.distributed import (ParamInfo, policy_for, policy_for_arch)
+from repro.backend.sharding import ParamInfo, policy_for, policy_for_arch
 from repro.runtime.fault import (Heartbeat, StragglerDetector, TransientError,
                                  retry_step)
 

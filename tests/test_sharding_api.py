@@ -1,0 +1,96 @@
+"""The unified sharding API (PR 10): ``repro.backend.sharding`` is the
+one module for policies, meshes, and partition profiles; the three old
+homes (``runtime.distributed``, ``launch.shardings``, ``launch.mesh``)
+are one-release deprecation shims that re-export from it with a
+DeprecationWarning.  ``scripts/check_deprecated.py`` polices in-repo
+imports; this file is its sanctioned exception and proves the shims
+still work for external callers."""
+import importlib
+import sys
+import warnings
+
+import pytest
+
+from repro.backend import sharding
+
+
+# ---------------------------------------------------------------------------
+# the new module is the single source of truth
+# ---------------------------------------------------------------------------
+def test_policy_profiles_resolve():
+    pol = sharding.policy_for("default")
+    assert pol.resolve("ffn") == ("model",)
+    assert pol.resolve(None) == ()
+    with pytest.raises(KeyError):
+        sharding.policy_for("no-such-profile")
+    # per-arch table falls back to default
+    assert isinstance(sharding.policy_for_arch("deepseek-7b"),
+                      sharding.ShardingPolicy)
+
+
+def test_partition_profile_tp_is_exact_column_parallel():
+    prof = sharding.partition_profile("tp")
+    assert prof.axes == ("model",) and prof.last_dim_only
+    assert prof.rules == {"heads": "model", "kv_heads": "model",
+                          "ffn": "model"}
+    # the rank-5 paged KV pool shards an interior dim: kv_heads is
+    # exempt from the last-dim restriction
+    assert "kv_heads" in prof.anywhere
+    assert prof.axis_sizes((2,)) == {"model": 2}
+    with pytest.raises(KeyError):
+        sharding.partition_profile("no-such-profile")
+    # pjit policy names double as (data, model) partition profiles
+    dp = sharding.partition_profile("default")
+    assert dp.axes == ("data", "model") and not dp.last_dim_only
+    assert dp.rules["batch"] == "data"
+    assert set(sharding.PARTITION_PROFILES) >= {"tp", "default"}
+
+
+def test_mesh_for_options_device_recipe():
+    """Asking for more mesh devices than the process has fails fast
+    with the XLA_FLAGS recipe (the subprocess legs set it for real)."""
+    import jax
+
+    from repro.backend import CompileOptions
+
+    opts = CompileOptions(mode="shardmap", partition="tp",
+                          mesh_shape=(len(jax.devices()) + 1,))
+    with pytest.raises(RuntimeError, match="device_count"):
+        sharding.mesh_for_options(opts)
+    # no mesh requested -> no mesh built
+    assert sharding.mesh_for_options(CompileOptions()) is None
+
+
+def test_mesh_helpers():
+    mesh = sharding.make_host_mesh()
+    assert set(mesh.axis_names) == {"data", "model"}
+    assert sharding.mesh_axis_sizes(mesh)["model"] == 1
+    assert sharding.data_axes(mesh) == ("data",)
+
+
+# ---------------------------------------------------------------------------
+# the deprecated shims re-export and warn exactly once per import
+# ---------------------------------------------------------------------------
+SHIMS = {
+    "repro.runtime.distributed": ("ShardingPolicy", "policy_for",
+                                  "policy_for_arch", "ParamInfo"),
+    "repro.launch.shardings": ("graph_shardings", "train_step_shardings",
+                               "param_shardings", "data_shardings"),
+    "repro.launch.mesh": ("make_mesh", "make_host_mesh",
+                          "make_production_mesh", "mesh_axis_sizes",
+                          "data_axes"),
+}
+
+
+@pytest.mark.parametrize("modname", sorted(SHIMS))
+def test_shim_reexports_with_deprecation_warning(modname):
+    sys.modules.pop(modname, None)  # the warning fires at import time
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mod = importlib.import_module(modname)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep, f"{modname} must warn on import"
+    assert "repro.backend.sharding" in str(dep[0].message)
+    for name in SHIMS[modname]:
+        assert getattr(mod, name) is getattr(sharding, name), \
+            f"{modname}.{name} must be the backend.sharding object"
